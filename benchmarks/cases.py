@@ -1,0 +1,138 @@
+"""§6.3 case studies: database joins, ML training, HFT market data.
+
+Paper claims: DB hit 84.7% -> 97.8% with 43% fewer I/O ops; ML case
+"623% faster gradient computation ... bandwidth -39%"; HFT sub-100ns
+relationship discovery vs 2.3-7.8 us heuristics with 12.4% FP.
+We reproduce the cache-level metrics that drive those numbers and report
+the model-derived latency per discovery.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (DEFAULT_COSTS, db_join_trace, hft_trace,
+                        ml_epoch_trace, simulate_baseline, simulate_pfcs,
+                        simulate_semantic)
+from repro.core.pfcs_cache import PFCSCache
+
+from .common import emit, save_json
+
+
+def case_db(seed: int = 0):
+    caps = (("L1", 128), ("L2", 512), ("L3", 4096))
+    tr = db_join_trace(n_orders=8000, n_customers=1000, n_items=2000,
+                       n_queries=30000, seed=seed)
+    lru = simulate_baseline("lru", tr, caps)
+    pfcs = simulate_pfcs(tr, caps)
+    io_reduction = 1.0 - pfcs.misses / max(1, lru.misses)
+    print("\n== Case study: production database (paper: 84.7%->97.8% hit, "
+          "-43% I/O) ==")
+    print(f"  hit rate: {lru.hit_rate*100:.1f}% -> {pfcs.hit_rate*100:.1f}%")
+    print(f"  backing-store I/O reduction: {io_reduction*100:.1f}%")
+    emit("case_db.hit_lru_pct", lru.hit_rate * 100)
+    emit("case_db.hit_pfcs_pct", pfcs.hit_rate * 100)
+    emit("case_db.io_reduction_pct", io_reduction * 100)
+    out = dict(lru_hit=lru.hit_rate, pfcs_hit=pfcs.hit_rate,
+               io_reduction=io_reduction)
+    save_json("case_db", out)
+    return out
+
+
+def case_ml(seed: int = 0):
+    caps = (("L1", 128), ("L2", 512), ("L3", 2048))
+    tr = ml_epoch_trace(n_samples=6000, n_feature_rows=1500, n_epochs=3,
+                        seed=seed)
+    lru = simulate_baseline("lru", tr, caps)
+    pfcs = simulate_pfcs(tr, caps)
+    # memory-bandwidth proxy: bytes moved from backing store
+    bw = 1.0 - (pfcs.misses + max(0, pfcs.prefetches_issued
+                                  - pfcs.prefetches_used)) / max(1, lru.misses)
+    speedup = lru.avg_latency_ns() / pfcs.avg_latency_ns()
+    print("\n== Case study: ML training data tier (paper: -39% bandwidth) ==")
+    print(f"  hit rate: {lru.hit_rate*100:.1f}% -> {pfcs.hit_rate*100:.1f}%")
+    print(f"  access speedup: {speedup:.2f}x   bandwidth delta: {bw*100:+.1f}%")
+    emit("case_ml.speedup", speedup)
+    emit("case_ml.bandwidth_delta_pct", bw * 100)
+    out = dict(lru_hit=lru.hit_rate, pfcs_hit=pfcs.hit_rate, speedup=speedup,
+               bandwidth_delta=bw)
+    save_json("case_ml", out)
+    return out
+
+
+def case_hft(seed: int = 0):
+    caps = (("L1", 256), ("L2", 1024), ("L3", 4096))
+    tr = hft_trace(n_instruments=3000, n_corr_groups=400, n_events=30000,
+                   seed=seed)
+    pfcs = simulate_pfcs(tr, caps)
+    sem = simulate_semantic(tr, caps, seed=seed)
+    # model-derived relationship-discovery latency: weighted stage costs
+    c = DEFAULT_COSTS
+    ops = pfcs.factor_ops
+    n_disc = max(1, sum(ops.values()))
+    disc_ns = (ops.get("table", 0) * c.lat_factor_table
+               + ops.get("cache", 0) * c.lat_factor_cache
+               + ops.get("trial", 0) * c.lat_factor_trial
+               + ops.get("rho", 0) * c.lat_factor_rho) / n_disc
+    sem_ns = c.lat_embedding
+    fp_rate = 1.0 - (sem.prefetch_precision or 1.0)
+    print("\n== Case study: HFT market data (paper: <100ns vs 2.3-7.8us, "
+          "0% vs 12.4% FP) ==")
+    print(f"  PFCS discovery latency (model): {disc_ns:.0f} ns/op "
+          f"(stages: {dict(ops)})")
+    print(f"  semantic discovery latency (model): {sem_ns:.0f} ns/op, "
+          f"false-positive rate {fp_rate*100:.1f}%")
+    print(f"  PFCS false positives: "
+          f"{(1.0 - (pfcs.prefetch_precision or 1.0))*100:.2f}% (Theorem 1)")
+    emit("case_hft.pfcs_discovery_ns", disc_ns)
+    emit("case_hft.semantic_fp_pct", fp_rate * 100)
+    out = dict(discovery_ns=disc_ns, semantic_fp=fp_rate,
+               pfcs_hit=pfcs.hit_rate, semantic_hit=sem.hit_rate)
+    save_json("case_hft", out)
+    return out
+
+
+def case_serving():
+    """PFCS paged-KV + expert-cache micro-case (the framework integration)."""
+    from repro.serving.expert_cache import ExpertCache
+    from repro.serving.kv_cache import PagedKVCache
+
+    rng = np.random.default_rng(0)
+    kv = PagedKVCache(hbm_pages=64, page_size=16, prefetch_budget=4)
+    shared = list(rng.integers(0, 1000, size=64))
+    for r in range(32):
+        tail = list(rng.integers(0, 1000, size=32))
+        kv.register_request(r, shared + tail)
+    for r in range(32):
+        for i in range(len(kv.chains[r])):
+            kv.touch(r, i)
+    print("\n== Case study: serving tier (PFCS pages + expert cache) ==")
+    print(f"  KV pages: hbm_hit={kv.stats.hbm_hit_rate*100:.1f}% "
+          f"prefetches={kv.stats.prefetches} "
+          f"shared_prefix_pages={kv.stats.shared_prefix_pages}")
+
+    E = 384
+    ec = ExpertCache(E, hbm_slots=96, prefetch_budget=7)
+    groups = [tuple(rng.choice(E, size=8, replace=False)) for _ in range(24)]
+    ec.observe_routing(groups)
+    for _ in range(2000):
+        g = groups[int(rng.integers(len(groups)))]
+        ec.activate([g[0]])
+        ec.activate(list(g[1:]))
+    print(f"  expert cache: hit={ec.stats.hit_rate*100:.1f}% "
+          f"prefetch_hits={ec.stats.prefetch_hits}")
+    emit("case_serving.kv_hbm_hit_pct", kv.stats.hbm_hit_rate * 100)
+    emit("case_serving.expert_hit_pct", ec.stats.hit_rate * 100)
+    out = dict(kv_hit=kv.stats.hbm_hit_rate, expert_hit=ec.stats.hit_rate,
+               shared_pages=kv.stats.shared_prefix_pages)
+    save_json("case_serving", out)
+    return out
+
+
+if __name__ == "__main__":
+    case_db()
+    case_ml()
+    case_hft()
+    case_serving()

@@ -1,0 +1,40 @@
+"""Shared benchmark helpers: trial aggregation + CSV emission."""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Callable, Dict, List, Sequence
+
+import numpy as np
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts"
+
+
+def agg(values: Sequence[float]):
+    a = np.asarray(list(values), dtype=np.float64)
+    return float(a.mean()), float(a.std(ddof=1)) if len(a) > 1 else 0.0
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """One CSV row: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def save_json(name: str, payload) -> Path:
+    out = ARTIFACTS / "bench"
+    out.mkdir(parents=True, exist_ok=True)
+    p = out / f"{name}.json"
+    p.write_text(json.dumps(payload, indent=1, default=float))
+    return p
+
+
+def timed(fn: Callable, *args, repeat: int = 3, **kw):
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best

@@ -1,0 +1,86 @@
+"""Kernel throughput: Pallas factorization/scan/gcd (interpret mode on this
+CPU container — wall numbers are correctness-path timings, the TPU story
+is the roofline) + host Factorizer stage mix."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Factorizer, sieve_primes
+from repro.kernels.ops import divisibility_scan, factorize_batch, gcd_batch
+
+from .common import emit, save_json, timed
+
+
+def run():
+    rng = np.random.default_rng(0)
+    primes = sieve_primes(10_000)
+    out = {}
+
+    # batched factorization kernel
+    pairs = rng.choice(primes[100:], size=(4096, 2), replace=True)
+    comps = (pairs[:, 0] * pairs[:, 1]).astype(np.int64)
+    pool = primes[100:100 + 1024].astype(np.int64)
+    (facs, _), dt = timed(factorize_batch, list(comps), list(pool), repeat=3)
+    per = dt / len(comps) * 1e6
+    print(f"\n== kernels == factorize_batch: {len(comps)} composites x "
+          f"{len(pool)} primes in {dt*1e3:.1f} ms ({per:.2f} us/composite)")
+    emit("kernel.factorize_batch.us_per_composite", per)
+    out["factorize_us_per_composite"] = per
+
+    # divisibility scan (prefetch path)
+    reg = (rng.choice(primes[100:], size=(8192, 2)).prod(axis=1)).astype(np.int64)
+    qs = pool[:512]
+    _, dt = timed(divisibility_scan, list(reg), list(qs), repeat=3)
+    per_q = dt / len(qs) * 1e6
+    print(f"   divisibility_scan: {len(reg)} registry x {len(qs)} queries "
+          f"in {dt*1e3:.1f} ms ({per_q:.2f} us/query)")
+    emit("kernel.divisibility_scan.us_per_query", per_q)
+    out["scan_us_per_query"] = per_q
+
+    # gcd
+    a = rng.integers(1, 2**30, size=65536)
+    b = rng.integers(1, 2**30, size=65536)
+    _, dt = timed(gcd_batch, list(a), list(b), repeat=3)
+    per_g = dt / len(a) * 1e6
+    print(f"   gcd_batch: {len(a)} pairs in {dt*1e3:.1f} ms "
+          f"({per_g:.3f} us/pair)")
+    emit("kernel.gcd_batch.us_per_pair", per_g)
+    out["gcd_us_per_pair"] = per_g
+
+    # host factorizer stage mix (Algorithm 2)
+    f = Factorizer()
+    small = rng.integers(4, 10**6, size=20000)
+    t0 = time.perf_counter()
+    for c in small:
+        f.factorize(int(c))
+    dt_small = (time.perf_counter() - t0) / len(small) * 1e9
+    big_pairs = rng.choice(sieve_primes(2_000_000)[78_498:], size=(500, 2))
+    bigs = [int(p) * int(q) for p, q in big_pairs]
+    t0 = time.perf_counter()
+    for c in bigs:
+        f.factorize(c)
+    dt_big = (time.perf_counter() - t0) / len(bigs) * 1e9
+    t0 = time.perf_counter()
+    for c in bigs:
+        f.factorize(c)                       # cache hits
+    dt_cached = (time.perf_counter() - t0) / len(bigs) * 1e9
+    print(f"   host factorizer: SPF-table path {dt_small:.0f} ns/op, "
+          f"rho path {dt_big:.0f} ns/op, cached {dt_cached:.0f} ns/op")
+    print(f"   stage mix: {f.stats.as_dict()}")
+    emit("host_factorizer.spf_ns", dt_small)
+    emit("host_factorizer.rho_ns", dt_big)
+    emit("host_factorizer.cached_ns", dt_cached)
+    out.update(spf_ns=dt_small, rho_ns=dt_big, cached_ns=dt_cached,
+               stages=f.stats.as_dict())
+    save_json("kernel_bench", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,81 @@
+"""Generate the EXPERIMENTS.md data tables from artifacts (dry-run,
+roofline, bench JSONs).  Run after ``dryrun --all`` + ``--probes`` and
+``benchmarks.run``:
+
+    PYTHONPATH=src python -m benchmarks.report > EXPERIMENTS.tables.md
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import ARCH_IDS, SHAPES, cells, get_config, shape_applies
+from repro.launch.dryrun import ARTIFACT_DIR
+
+BENCH = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+
+
+def _load(name):
+    p = ARTIFACT_DIR / f"{name}.json"
+    return json.loads(p.read_text()) if p.exists() else None
+
+
+def dryrun_table():
+    print("### Dry-run matrix (compile status, per-device memory)\n")
+    print("| arch | shape | mesh | status | args GiB | temp GiB | "
+          "fits 16 GiB | collective kinds |")
+    print("|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shp in SHAPES:
+            if not shape_applies(cfg, shp):
+                print(f"| {arch} | {shp.name} | — | SKIP (full attention, "
+                      f"per assignment) | — | — | — | — |")
+                continue
+            for mesh in ("pod_16x16", "multipod_2x16x16"):
+                r = _load(f"{arch}__{shp.name}__{mesh}")
+                if r is None:
+                    print(f"| {arch} | {shp.name} | {mesh} | MISSING | | | | |")
+                    continue
+                mem = r.get("memory", {})
+                args = mem.get("argument_size_in_bytes", 0) / 2**30
+                temp = mem.get("temp_size_in_bytes", 0) / 2**30
+                fits = "yes" if (args + temp) <= 16 else "NO*"
+                kinds = ",".join(sorted(r.get("collectives", {})))
+                print(f"| {arch} | {shp.name} | {mesh} | {r['status']} | "
+                      f"{args:.2f} | {temp:.2f} | {fits} | {kinds} |")
+    print()
+
+
+def roofline_table():
+    rl = BENCH / "roofline.json"
+    if not rl.exists():
+        print("(roofline.json missing — run benchmarks.run first)\n")
+        return
+    rows = json.loads(rl.read_text())
+    print("### Roofline terms (per device, single-pod 16x16, v5e: "
+          "197 TF bf16 / 819 GB/s HBM / 50 GB/s ICI)\n")
+    print("| arch | shape | compute s | memory s | collective s | dominant "
+          "| MODEL/HLO flops | what would move the dominant term |")
+    print("|---|---|---|---|---|---|---|---|")
+    for key, r in rows.items():
+        print(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4g} | "
+              f"{r['memory_s']:.4g} | {r['collective_s']:.4g} | "
+              f"{r['dominant']} | {r['useful_ratio']:.3f} | {r['fix']} |")
+    print()
+
+
+def bench_tables():
+    for name in ("table1", "fig2a", "fig2b", "case_db", "case_ml",
+                 "case_hft", "case_serving", "kernel_bench"):
+        p = BENCH / f"{name}.json"
+        if p.exists():
+            print(f"### bench:{name}\n```json")
+            print(p.read_text())
+            print("```\n")
+
+
+if __name__ == "__main__":
+    dryrun_table()
+    roofline_table()

@@ -1,0 +1,49 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+Emits ``name,us_per_call,derived`` CSV rows (stdout) plus human-readable
+tables; JSON artifacts land in ``artifacts/bench/``.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--skip-roofline]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale trial counts (slower)")
+    ap.add_argument("--skip-roofline", action="store_true",
+                    help="skip the dry-run-artifact roofline table")
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+    print("name,us_per_call,derived")
+
+    from . import table1, fig2, cases, kernel_bench
+
+    table1.run(n_trials=20 if args.full else 4)
+    fig2.run_fig2a()
+    fig2.run_fig2b()
+    cases.case_db()
+    cases.case_ml()
+    cases.case_hft()
+    cases.case_serving()
+    kernel_bench.run()
+
+    if not args.skip_roofline:
+        try:
+            from . import roofline
+            roofline.run()
+        except Exception as e:  # artifacts may not exist yet
+            print(f"[roofline skipped: {e}]")
+
+    print(f"\ntotal benchmark wall time: {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

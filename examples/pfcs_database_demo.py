@@ -1,0 +1,35 @@
+"""The paper's motivating example (§2.1) end to end: a join-heavy OLTP
+workload where PFCS discovers FK relationships deterministically and
+beats LRU/ARC/semantic caching on hit rate and modeled latency.
+
+    PYTHONPATH=src python examples/pfcs_database_demo.py
+"""
+
+from repro.core import (db_join_trace, derive_table1_row, run_all_systems)
+
+CAPS = (("L1", 64), ("L2", 256), ("L3", 2048))
+
+trace = db_join_trace(n_orders=4000, n_customers=600, n_items=1200,
+                      n_queries=20000)
+print(f"workload: {trace.length} accesses over {trace.n_keys} rows, "
+      f"{len(trace.relationships)} FK relationships "
+      "(orders -> customers -> items)\n")
+
+results = run_all_systems(trace, CAPS,
+                          systems=("lru", "arc", "semantic", "pfcs"))
+base = results["lru"]
+print(f"{'system':10s} {'hit rate':>9s} {'lat. red.':>10s} "
+      f"{'rel. accuracy':>14s}")
+for name, stats in results.items():
+    row = derive_table1_row(stats, base)
+    acc = (f"{row['relationship_accuracy_pct']:.1f}%"
+           if row["relationship_accuracy_pct"] is not None else "n/a")
+    print(f"{name:10s} {row['hit_rate_pct']:8.1f}% "
+          f"{row['latency_reduction_pct']:9.1f}% {acc:>14s}")
+
+pfcs = results["pfcs"]
+print(f"\nPFCS prefetches: {pfcs.prefetches_issued} issued, "
+      f"{pfcs.prefetches_used} used before eviction, "
+      f"precision {100*pfcs.prefetch_precision:.1f}% "
+      "(zero false positives — Theorem 1)")
+print(f"factorization stages: {pfcs.factor_ops}")

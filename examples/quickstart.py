@@ -1,0 +1,38 @@
+"""PFCS quickstart: deterministic relationship discovery in 60 seconds.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import PFCSCache, Factorizer
+
+# ---------------------------------------------------------------- #
+# 1. the core idea: relationships are composites of unique primes  #
+# ---------------------------------------------------------------- #
+f = Factorizer()
+# customer_id=3291 -> prime 11, order_id=12847 -> prime 13 (paper §2.2)
+composite = 11 * 13
+print(f"composite {composite} factors back to {f.factorize(composite)}"
+      " — exactly the related pair, zero false positives (Theorem 1)")
+
+# ---------------------------------------------------------------- #
+# 2. the cache system                                              #
+# ---------------------------------------------------------------- #
+cache = PFCSCache(capacities=(("L1", 8), ("L2", 32), ("L3", 128)))
+
+# schema time: the database registers its FK relationships
+cache.register_relationship(["order:12847", "customer:3291"], kind="fk")
+cache.register_relationship(["order:12847", "item:555", "item:777"], kind="fk")
+
+# runtime: a query touches the order row...
+hit, level, _ = cache.access("order:12847")
+print(f"access order:12847 -> hit={hit} (cold miss, as expected)")
+
+# ...and PFCS has already prefetched everything provably related:
+for key in ["customer:3291", "item:555", "item:777"]:
+    hit, level, was_prefetched = cache.access(key)
+    print(f"access {key:14s} -> hit={hit} at {level} "
+          f"(prefetched={was_prefetched})")
+
+print(f"\nprefetches issued: {cache.prefetches_issued} — every one "
+      "mathematically related to its trigger")
+print(f"factorization stage mix: {cache.factor_stats.as_dict()}")

@@ -1,0 +1,15 @@
+"""Serve a small model with batched requests through the continuous-
+batching engine + PFCS paged KV cache (prefix sharing, page prefetch).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import sys
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    serve_main(["--arch", "qwen2.5-3b", "--requests", "12",
+                "--max-new", "16", "--max-batch", "4", "--max-seq", "192",
+                "--shared-prefix", "32"])
+    sys.exit(0)

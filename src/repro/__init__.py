@@ -1,0 +1,10 @@
+"""repro — PFCS (Prime Factorization Cache System) as a multi-pod JAX
+training/serving framework.
+
+Subpackages: ``core`` (the paper's contribution), ``kernels`` (Pallas),
+``models`` / ``configs`` (the 10 assigned architectures), ``sharding`` /
+``launch`` (distribution + dry-run), ``training`` / ``serving`` / ``data``
+(substrates).  See README.md.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,43 @@
+"""PFCS core — the paper's primary contribution.
+
+Prime-factorization-based deterministic data-relationship discovery for
+cache systems (Le, CS.DB 2025): unique prime assignment (Algorithm 1),
+composite relationship encoding, multi-stage factorization (Algorithm 2),
+intelligent prefetching (§4.2), hierarchical cache integration (§3.2),
+plus every baseline the paper compares against and the trace-driven
+evaluation harness behind Table 1 / Fig. 2.
+"""
+
+from .primes import (CacheLevel, HierarchicalPrimeAllocator, PrimePool,
+                     is_prime, segmented_sieve, sieve_primes, spf_table)
+from .factorization import Factorizer, FactorizationStats, PRECOMPUTED_LIMIT
+from .composite import CompositeRegistry, Relationship, encode_relationship
+from .assignment import AccessTracker, PrimeAssigner
+from .prefetch import IntelligentPrefetcher, PrefetchDecision
+from .pfcs_cache import PFCSCache
+from .policies import (ARCCachePolicy, CachePolicy, FIFOCachePolicy,
+                       LIRSCachePolicy, LRUCachePolicy, TwoQCachePolicy,
+                       make_policy)
+from .semantic import SemanticRelationshipModel
+from .metrics import AccessStats, TierCosts, DEFAULT_COSTS, derive_table1_row
+from .traces import (Trace, db_join_trace, graph_walk_trace, hft_trace,
+                     ml_epoch_trace, scan_trace, zipf_trace)
+from .simulator import (DEFAULT_LEVELS, fast_lru_hit_rate, run_all_systems,
+                        simulate_baseline, simulate_pfcs, simulate_semantic)
+
+__all__ = [
+    "CacheLevel", "HierarchicalPrimeAllocator", "PrimePool", "is_prime",
+    "segmented_sieve", "sieve_primes", "spf_table",
+    "Factorizer", "FactorizationStats", "PRECOMPUTED_LIMIT",
+    "CompositeRegistry", "Relationship", "encode_relationship",
+    "AccessTracker", "PrimeAssigner",
+    "IntelligentPrefetcher", "PrefetchDecision", "PFCSCache",
+    "ARCCachePolicy", "CachePolicy", "FIFOCachePolicy", "LIRSCachePolicy",
+    "LRUCachePolicy", "TwoQCachePolicy", "make_policy",
+    "SemanticRelationshipModel",
+    "AccessStats", "TierCosts", "DEFAULT_COSTS", "derive_table1_row",
+    "Trace", "db_join_trace", "graph_walk_trace", "hft_trace",
+    "ml_epoch_trace", "scan_trace", "zipf_trace",
+    "DEFAULT_LEVELS", "fast_lru_hit_rate", "run_all_systems",
+    "simulate_baseline", "simulate_pfcs", "simulate_semantic",
+]

@@ -1,0 +1,228 @@
+"""Composite relationship encoding & registry (PFCS §3.1, §4.2).
+
+A relationship over data elements {d1..dk} with primes {p1..pk} is stored
+as the composite c = Π pi.  The Fundamental Theorem of Arithmetic makes the
+decoding (factorization) unique — Theorem 1's zero-false-positive
+guarantee, which the test-suite checks as a machine property.
+
+64-bit overflow management
+--------------------------
+The paper implicitly assumes composites fit machine words ("systems with
+10**12 elements require primes within 64-bit ranges", §7.1).  Products of
+many primes overflow regardless, so the registry *chunks* a k-ary
+relationship into composites that each fit ``max_bits`` (default 62, so
+int64 device kernels stay exact); all chunks share a relationship id.
+Pairwise relationships — the dominant case in the paper's workloads
+(FK pairs, feature pairs, instrument pairs) — always fit.
+
+The registry also maintains the flat numpy array view of live composites
+that the TPU divisibility-scan kernel (``repro.kernels.divisibility``)
+consumes directly.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from .factorization import Factorizer
+
+__all__ = ["encode_relationship", "CompositeRegistry", "Relationship"]
+
+
+def encode_relationship(primes: Sequence[int], max_bits: int = 62) -> List[int]:
+    """Chunk a multiset of primes into composites, each < 2**max_bits.
+
+    Greedy first-fit keeps chunk count minimal for sorted input. Raises if
+    any single prime alone exceeds the bound (cannot be represented).
+    """
+    limit = 1 << max_bits
+    chunks: List[int] = []
+    cur = 1
+    for p in sorted(primes):
+        if p <= 1:
+            raise ValueError(f"not a prime: {p}")
+        if p >= limit:
+            raise ValueError(f"prime {p} exceeds {max_bits}-bit composite budget")
+        if cur * p >= limit:
+            chunks.append(cur)
+            cur = p
+        else:
+            cur *= p
+    if cur > 1:
+        chunks.append(cur)
+    return chunks
+
+
+@dataclass(frozen=True)
+class Relationship:
+    """One registered relationship (e.g. an FK edge or co-access group)."""
+
+    rel_id: int
+    primes: FrozenSet[int]
+    composites: Tuple[int, ...]
+    kind: str = "generic"
+    weight: float = 1.0
+
+
+class CompositeRegistry:
+    """Live store of relationship composites with divisibility scanning.
+
+    API mirrors the paper's use:
+      * ``register(primes)``       — establish a relationship (composite(s))
+      * ``related_to(p)``          — §4.2 intelligent prefetch: all primes
+                                     co-occurring with p in any composite,
+                                     recovered *by factorization*.
+      * ``composites_array()``     — int64 view for the Pallas scan kernel.
+    """
+
+    def __init__(self, factorizer: Optional[Factorizer] = None, max_bits: int = 62):
+        self.factorizer = factorizer or Factorizer()
+        self.max_bits = max_bits
+        self._next_id = 0
+        self._by_id: Dict[int, Relationship] = {}
+        self._by_composite: Dict[int, int] = {}  # composite -> rel_id
+        self._prime_degree: Dict[int, int] = {}  # prime -> #relationships
+        self._dirty = True
+        self._arr: np.ndarray = np.empty(0, dtype=np.int64)
+        self.version = 0  # bumped on every mutation (memoization key)
+
+    # -- registration -------------------------------------------------------
+
+    def register(self, primes: Iterable[int], kind: str = "generic", weight: float = 1.0) -> Relationship:
+        pset = frozenset(int(p) for p in primes)
+        if len(pset) < 2:
+            raise ValueError("a relationship needs >= 2 distinct elements")
+        comps = tuple(encode_relationship(sorted(pset), self.max_bits))
+        rel = Relationship(self._next_id, pset, comps, kind, weight)
+        self._next_id += 1
+        self._by_id[rel.rel_id] = rel
+        for c in comps:
+            self._by_composite[c] = rel.rel_id
+        for p in pset:
+            self._prime_degree[p] = self._prime_degree.get(p, 0) + 1
+        self._dirty = True
+        self.version += 1
+        return rel
+
+    def unregister(self, rel_id: int) -> None:
+        rel = self._by_id.pop(rel_id, None)
+        if rel is None:
+            return
+        for c in rel.composites:
+            self._by_composite.pop(c, None)
+        for p in rel.primes:
+            d = self._prime_degree.get(p, 0) - 1
+            if d <= 0:
+                self._prime_degree.pop(p, None)
+            else:
+                self._prime_degree[p] = d
+        self._dirty = True
+        self.version += 1
+
+    def drop_prime(self, p: int) -> List[int]:
+        """Remove every relationship involving prime p (prime recycling
+        must purge stale composites or factorization would resurrect a
+        recycled element — paper §7.2 'prime space management')."""
+        doomed = [r.rel_id for r in self._by_id.values() if p in r.primes]
+        for rid in doomed:
+            self.unregister(rid)
+        return doomed
+
+    # -- queries -------------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._by_id)
+
+    @property
+    def n_composites(self) -> int:
+        return len(self._by_composite)
+
+    def degree(self, p: int) -> int:
+        return self._prime_degree.get(p, 0)
+
+    def composites_array(self) -> np.ndarray:
+        """Flat int64 array of all live composites (kernel input)."""
+        if self._dirty:
+            self._arr = np.fromiter(self._by_composite.keys(), dtype=np.int64,
+                                    count=len(self._by_composite))
+            self._dirty = False
+        return self._arr
+
+    def relationship_of_composite(self, c: int) -> Optional[Relationship]:
+        rid = self._by_composite.get(c)
+        return self._by_id.get(rid) if rid is not None else None
+
+    def containing(self, p: int) -> List[Relationship]:
+        """All relationships whose composite is divisible by p.
+
+        This is the paper's §4.2 scan: divisibility test over the registry,
+        then *factorization* of the matching composites recovers the exact
+        member set (not a reverse-index lookup — the correctness of the
+        factorization path is the claim under test, and the scan is what
+        the TPU kernel accelerates).
+        """
+        arr = self.composites_array()
+        if arr.size == 0:
+            return []
+        hits = arr[arr % p == 0]
+        out: List[Relationship] = []
+        seen: Set[int] = set()
+        for c in hits:
+            c = int(c)
+            factors = self._factor_with_hint(c, p)
+            assert p in factors, "divisibility hit must contain p (Theorem 1)"
+            rid = self._by_composite[c]
+            if rid not in seen:
+                seen.add(rid)
+                out.append(self._by_id[rid])
+        return out
+
+    def _factor_with_hint(self, c: int, p: int) -> Tuple[int, ...]:
+        """Factor c given the known factor p from the divisibility scan.
+
+        The scan *is* trial division by pool primes (Algorithm 2 stage 1):
+        once p is known, the cofactor c//p is either 1, prime (pairwise
+        relationship — the dominant case), or recursed through the full
+        multi-stage factorizer.  Stage stats are charged accordingly.
+        """
+        from .primes import is_prime  # local import avoids cycle at module load
+
+        cached = self.factorizer.cache.get(c)
+        if cached is not None and p in cached:
+            self.factorizer.stats.cache_hits += 1
+            self.factorizer.stats.total += 1
+            return tuple(sorted(set(cached)))
+        q, r = divmod(c, p)
+        assert r == 0
+        self.factorizer.stats.total += 1
+        self.factorizer.stats.trial_division += 1
+        if q == 1:
+            out = (p,)
+        elif is_prime(q):
+            out = (p, q)
+        else:
+            # generous budget: registry hits must decode exactly (partial
+            # factorizations are never cached — see Factorizer.factorize)
+            out = tuple(sorted({p, *self.factorizer.factorize(
+                q, time_budget_s=1.0)}))
+        self.factorizer.cache.put(c, out)
+        return out
+
+    def related_primes(self, p: int) -> Set[int]:
+        """All primes deterministically related to p (excluding p)."""
+        rel: Set[int] = set()
+        for r in self.containing(p):
+            for c in r.composites:
+                for q in self.factorizer.distinct_factors(int(c)):
+                    if q != p:
+                        rel.add(q)
+            # multi-chunk relationships: all member primes are related
+            rel |= set(r.primes) - {p}
+        return rel
+
+    def decode(self, c: int) -> Tuple[int, ...]:
+        """Factorize an arbitrary composite back to its member primes."""
+        return self.factorizer.distinct_factors(int(c))

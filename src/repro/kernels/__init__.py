@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the PFCS factorization hot paths.
+
+``factorize.py``  — batched squarefree trial-division factorization
+                    (VMEM-tiled composites x prime-pool grid)
+``gcd.py``        — batched Euclidean gcd (chain-composite intersection)
+``ops.py``        — host-facing jit'd wrappers (padding, int32/int64 path)
+``ref.py``        — pure-jnp oracles the kernels are tested against
+
+Validated in interpret mode on CPU; compiled path targets TPU (see
+DESIGN.md §3 for the int-width adaptation notes).
+"""
+
+from .ops import (INT32_SAFE_LIMIT, divisibility_scan, factorize_batch,
+                  gcd_batch)
+
+__all__ = ["INT32_SAFE_LIMIT", "divisibility_scan", "factorize_batch",
+           "gcd_batch"]

@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: batched squarefree factorization by trial division.
+
+PFCS Algorithm 2 stage 1 (trial division against a prime pool), adapted
+from the paper's per-access scalar loop to a TPU-native *batched* kernel:
+the registry refresh / bulk relationship-discovery path factorizes many
+composites against a whole pool at once.
+
+Layout (all VMEM):
+    composites tile  (BN, 1)  int32/int64  — one composite per sublane row
+    primes tile      (1, BP)  int32/int64  — prime pool along lanes
+    mask out tile    (BN, BP) bool         — mask[i,j] = p_j | c_i
+    residual out     (BN, 1)               — c_i / prod(dividing p_j)
+
+Grid: (N/BN, P/BP).  The prime axis (j) is the innermost, sequentially
+executed grid dimension on TPU, so the residual tile accumulates the
+running cofactor across prime tiles: initialized to the composite at
+j == 0, divided by every dividing prime as tiles stream through.  This is
+the standard TPU accumulator pattern (same shape as a matmul K-loop).
+
+Default tile sizes keep the working set well under VMEM (BN=256, BP=512
+int32 ≈ 0.5 MB including the bool tile) and lane-align BP to 128.
+
+TPU int width note (DESIGN.md §3): the int32 fast path covers L1xL1 and
+L1xL2 composites (the hot path by construction — hot data gets small
+primes).  The int64 variant is validated in interpret mode and is the
+reference semantics for hardware with emulated 64-bit integer ops.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["factorize_squarefree_pallas", "divisibility_mask_pallas"]
+
+
+def _factorize_kernel(c_ref, p_ref, mask_ref, res_ref):
+    """One (BN, BP) tile: divisibility mask + residual accumulation."""
+    j = pl.program_id(1)
+    c = c_ref[...]          # (BN, 1)
+    p = p_ref[...]          # (1, BP)
+    safe_p = jnp.where(p <= 1, jnp.ones_like(p), p)
+    divides = jnp.logical_and((c % safe_p) == 0, p > 1)   # (BN, BP)
+    mask_ref[...] = divides
+
+    # residual accumulator: init with the composite on the first prime tile
+    @pl.when(j == 0)
+    def _init():
+        res_ref[...] = c
+
+    # divide out every dividing prime in this tile (squarefree: each prime
+    # appears at most once, so a single exact division per prime is exact).
+    factor = jnp.where(divides, safe_p, jnp.ones_like(safe_p))
+    tile_prod = jnp.prod(factor, axis=1, keepdims=True)   # (BN, 1)
+    res_ref[...] = res_ref[...] // jnp.maximum(tile_prod, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_p", "interpret"))
+def factorize_squarefree_pallas(
+    composites: jnp.ndarray,   # (N,) int32/int64, N % block_n == 0
+    primes: jnp.ndarray,       # (P,) same dtype, P % block_p == 0
+    *,
+    block_n: int = 256,
+    block_p: int = 512,
+    interpret: bool = True,
+):
+    """Returns ``(mask (N, P) bool, residual (N,))`` — see ref.py oracle."""
+    n, p = composites.shape[0], primes.shape[0]
+    assert n % block_n == 0 and p % block_p == 0, (n, p, block_n, block_p)
+    c2 = composites.reshape(n, 1)
+    p2 = primes.reshape(1, p)
+    grid = (n // block_n, p // block_p)
+
+    mask, residual = pl.pallas_call(
+        _factorize_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_p), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, block_p), lambda i, j: (i, j)),
+            pl.BlockSpec((block_n, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, p), jnp.bool_),
+            jax.ShapeDtypeStruct((n, 1), composites.dtype),
+        ],
+        interpret=interpret,
+    )(c2, p2)
+    return mask, residual.reshape(n)
+
+
+def _divmask_kernel(c_ref, p_ref, mask_ref):
+    c = c_ref[...]
+    p = p_ref[...]
+    safe_p = jnp.where(p <= 1, jnp.ones_like(p), p)
+    mask_ref[...] = jnp.logical_and((c % safe_p) == 0, p > 1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_p", "interpret"))
+def divisibility_mask_pallas(
+    composites: jnp.ndarray,   # (N,) — the registry
+    primes: jnp.ndarray,       # (P,) — query primes (recently accessed)
+    *,
+    block_n: int = 256,
+    block_p: int = 512,
+    interpret: bool = True,
+):
+    """Prefetch candidate scan (§4.2): mask[i, j] = primes[j] | composites[i].
+
+    Mask-only variant of the factorize kernel for the serving-path hot
+    loop: the host compacts per-query candidate lists from the mask and
+    hands pairwise cofactors to the O(1) primality fast path.
+    """
+    n, p = composites.shape[0], primes.shape[0]
+    assert n % block_n == 0 and p % block_p == 0, (n, p, block_n, block_p)
+    grid = (n // block_n, p // block_p)
+    return pl.pallas_call(
+        _divmask_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_p), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_p), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, p), jnp.bool_),
+        interpret=interpret,
+    )(composites.reshape(n, 1), primes.reshape(1, p))

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: batched elementwise GCD (Euclid, fixed trip count).
+
+Used by the serving tier for deterministic shared-prefix discovery:
+``gcd(chain_composite_a, chain_composite_b)`` is the composite of the
+shared pages (PFCS relationship intersection — exact, zero false
+positives by unique factorization).
+
+Vectorization note: binary GCD needs count-trailing-zeros, which does not
+vectorize cleanly on the VPU; the Euclidean form ``(a, b) -> (b, a mod b)``
+is branch-free with a ``b == 0`` guard and converges in <= 47 iterations
+for int32 (Fibonacci worst case), <= 92 for int64.  A fixed-trip
+``lax.fori_loop`` keeps the kernel shape static.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+__all__ = ["gcd_pallas"]
+
+_TRIPS = {jnp.dtype(jnp.int32): 48, jnp.dtype(jnp.int64): 96}
+
+
+def _gcd_kernel(a_ref, b_ref, o_ref, *, trips: int):
+    a = a_ref[...]
+    b = b_ref[...]
+
+    def body(_, ab):
+        a, b = ab
+        safe_b = jnp.where(b == 0, jnp.ones_like(b), b)
+        r = jnp.where(b == 0, jnp.zeros_like(a), a % safe_b)
+        new_a = jnp.where(b == 0, a, b)
+        return new_a, r
+
+    a, b = lax.fori_loop(0, trips, body, (a, b))
+    o_ref[...] = a
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def gcd_pallas(
+    a: jnp.ndarray,   # (N,) int32/int64, N % block_n == 0
+    b: jnp.ndarray,   # (N,) same
+    *,
+    block_n: int = 1024,
+    interpret: bool = True,
+):
+    """Elementwise gcd(a, b) — matches ``jnp.gcd`` (incl. gcd(x, 0) = |x|;
+    PFCS composites are positive so the abs path never triggers)."""
+    n = a.shape[0]
+    assert n % block_n == 0, (n, block_n)
+    trips = _TRIPS[jnp.dtype(a.dtype)]
+    # lanes-last layout: (rows, 128)
+    lanes = 128
+    assert block_n % lanes == 0
+    rows = block_n // lanes
+    a2 = a.reshape(n // lanes, lanes)
+    b2 = b.reshape(n // lanes, lanes)
+    out = pl.pallas_call(
+        functools.partial(_gcd_kernel, trips=trips),
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((rows, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((rows, lanes), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, lanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n // lanes, lanes), a.dtype),
+        interpret=interpret,
+    )(a2, b2)
+    return out.reshape(n)

@@ -1,0 +1,140 @@
+"""Public jit'd wrappers around the PFCS Pallas kernels.
+
+Handles the ragged real world: pads inputs to tile multiples, picks the
+int32 fast path vs the int64 wide path per composite magnitude (DESIGN.md
+§3 — TPUs have no fast 64-bit integer multiply, and PFCS routes hot data
+to small primes precisely so the hot path stays narrow), and decides
+interpret mode from the backend (compiled on TPU, interpreted on CPU).
+
+Numpy in, numpy out — these are host-callable building blocks used by the
+registry/prefetcher when batch sizes justify the device round trip.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .factorize import divisibility_mask_pallas, factorize_squarefree_pallas
+from .gcd import gcd_pallas
+
+__all__ = ["factorize_batch", "divisibility_scan", "gcd_batch",
+           "INT32_SAFE_LIMIT"]
+
+# composites below this fit the int32 fast path
+INT32_SAFE_LIMIT = 2**31 - 1
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: np.ndarray, mult: int, fill) -> np.ndarray:
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    return np.concatenate([x, np.full(pad, fill, dtype=x.dtype)])
+
+
+def _pick_dtype(*arrays: np.ndarray):
+    hi = max((int(a.max()) if a.size else 0) for a in arrays)
+    return np.int32 if hi <= INT32_SAFE_LIMIT else np.int64
+
+
+def factorize_batch(
+    composites: Sequence[int],
+    primes: Sequence[int],
+    block_n: int = 256,
+    block_p: int = 512,
+    interpret: bool | None = None,
+) -> Tuple[List[List[int]], np.ndarray]:
+    """Factor each composite against the pool.
+
+    Returns ``(factors, residuals)`` — per composite the dividing pool
+    primes and the remaining cofactor (1 when fully factored).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    comp = np.asarray(list(composites))
+    pool = np.asarray(list(primes))
+    if comp.size == 0:
+        return [], np.empty(0, dtype=np.int64)
+    dt = _pick_dtype(comp, pool)
+    n, p = comp.shape[0], pool.shape[0]
+    comp_p = _pad_to(comp.astype(dt), block_n, 1)
+    pool_p = _pad_to(pool.astype(dt), block_p, 0)
+    with jax.enable_x64(True) if dt == np.int64 else _nullcontext():
+        mask, residual = factorize_squarefree_pallas(
+            jnp.asarray(comp_p), jnp.asarray(pool_p),
+            block_n=block_n, block_p=block_p, interpret=interpret)
+        mask = np.asarray(mask)[:n, :p]
+        residual = np.asarray(residual)[:n]
+    factors = [[int(pool[j]) for j in np.nonzero(mask[i])[0]] for i in range(n)]
+    return factors, residual.astype(np.int64)
+
+
+def divisibility_scan(
+    registry: Sequence[int],
+    query_primes: Sequence[int],
+    block_n: int = 256,
+    block_p: int = 512,
+    interpret: bool | None = None,
+) -> List[np.ndarray]:
+    """For each query prime, indices of registry composites it divides.
+
+    The §4.2 prefetch scan: host compacts the kernel's boolean mask into
+    candidate index lists.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    reg = np.asarray(list(registry))
+    qs = np.asarray(list(query_primes))
+    if reg.size == 0 or qs.size == 0:
+        return [np.empty(0, dtype=np.int64) for _ in range(qs.size)]
+    dt = _pick_dtype(reg, qs)
+    n, q = reg.shape[0], qs.shape[0]
+    reg_p = _pad_to(reg.astype(dt), block_n, 1)
+    qs_p = _pad_to(qs.astype(dt), block_p, 0)
+    with jax.enable_x64(True) if dt == np.int64 else _nullcontext():
+        mask = divisibility_mask_pallas(
+            jnp.asarray(reg_p), jnp.asarray(qs_p),
+            block_n=block_n, block_p=block_p, interpret=interpret)
+        mask = np.asarray(mask)[:n, :q]
+    return [np.nonzero(mask[:, j])[0] for j in range(q)]
+
+
+def gcd_batch(
+    a: Sequence[int],
+    b: Sequence[int],
+    block_n: int = 1024,
+    interpret: bool | None = None,
+) -> np.ndarray:
+    """Elementwise gcd over pairs (shared-prefix composite discovery)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    aa = np.asarray(list(a))
+    bb = np.asarray(list(b))
+    assert aa.shape == bb.shape
+    if aa.size == 0:
+        return np.empty(0, dtype=np.int64)
+    dt = _pick_dtype(aa, bb)
+    n = aa.shape[0]
+    ap = _pad_to(aa.astype(dt), block_n, 0)
+    bp = _pad_to(bb.astype(dt), block_n, 0)
+    with jax.enable_x64(True) if dt == np.int64 else _nullcontext():
+        g = gcd_pallas(jnp.asarray(ap), jnp.asarray(bp),
+                       block_n=block_n, interpret=interpret)
+        g = np.asarray(g)[:n]
+    return g.astype(np.int64)
+
+
+class _nullcontext:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False

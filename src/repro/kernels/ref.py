@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the PFCS Pallas kernels.
+
+These are the semantic ground truth the kernels are validated against
+(tests sweep shapes/dtypes and assert exact equality — integer kernels,
+no tolerance needed).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["divisibility_mask_ref", "factorize_squarefree_ref", "gcd_ref"]
+
+
+def divisibility_mask_ref(composites: jnp.ndarray, primes: jnp.ndarray) -> jnp.ndarray:
+    """mask[i, j] = primes[j] divides composites[i].
+
+    composites: (N,) int32/int64, primes: (P,) same dtype -> (N, P) bool.
+    Zero-padded primes never divide (pad-safe); composite 0/1 rows are all
+    False for primes > 1.
+    """
+    c = composites[:, None]
+    p = primes[None, :]
+    safe_p = jnp.where(p <= 0, 1, p)
+    mask = (c % safe_p) == 0
+    return jnp.logical_and(mask, p > 1)
+
+
+def factorize_squarefree_ref(composites: jnp.ndarray, primes: jnp.ndarray):
+    """Squarefree factorization against a prime pool.
+
+    PFCS composites are products of *distinct* primes (one per data
+    element), so the divisibility mask IS the factorization.  Returns
+    ``(mask, residual)`` where ``residual[i] = composites[i] / prod of
+    dividing pool primes`` — 1 when the pool fully factors the composite,
+    else the cofactor for the next (colder) pool / Pollard stage.
+    """
+    mask = divisibility_mask_ref(composites, primes)
+    p = primes[None, :].astype(composites.dtype)
+    factors = jnp.where(mask, p, jnp.ones_like(p))
+    prod = jnp.prod(factors, axis=1)
+    residual = jnp.where(prod > 0, composites // jnp.maximum(prod, 1), composites)
+    return mask, residual
+
+
+def gcd_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Elementwise gcd (Euclid), same shape/dtype in and out."""
+    return jnp.gcd(a, b)

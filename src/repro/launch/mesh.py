@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+Defined as a FUNCTION (never module-level) so importing this module never
+touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+initialization, and smoke tests must keep seeing 1 device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "HW"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips.
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """All locally-visible devices on a (data, model) mesh (tests/examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
+class HW:
+    """TPU v5e hardware constants for the roofline model (per chip)."""
+
+    PEAK_BF16_FLOPS = 197e12     # FLOP/s
+    HBM_BW = 819e9               # bytes/s
+    ICI_BW = 50e9                # bytes/s per link
+    HBM_BYTES = 16 * 2**30       # 16 GiB

@@ -1,0 +1,5 @@
+"""Model zoo: every assigned architecture family, pure-functional JAX."""
+
+from .model_zoo import Model, build_model, count_params_analytic
+
+__all__ = ["Model", "build_model", "count_params_analytic"]

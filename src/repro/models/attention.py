@@ -1,0 +1,178 @@
+"""Attention: GQA/MQA with RoPE and qk-norm; train / prefill / decode paths.
+
+Three execution regimes:
+
+  * ``attention_full``     — plain einsum attention (short sequences,
+                             smoke tests).
+  * ``attention_chunked``  — query-block ``lax.scan``: O(chunk x S) score
+                             working set instead of O(S^2).  TPU-adapted
+                             flash-style streaming (online softmax is not
+                             needed because each query block sees the full
+                             key axis per step — one pass, exact softmax).
+  * ``decode_attention``   — single-token query against a KV cache
+                             (optionally sequence-sharded for 500k-token
+                             decode; see sharding rules).
+
+All paths share the GQA grouping einsum: q heads are reshaped to
+(kv_heads, group) so no materialized KV repeat is needed.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import F32, apply_rope, dense_init, init_rmsnorm, rms_norm
+
+Params = Dict[str, Any]
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------- #
+# parameters                                                                  #
+# --------------------------------------------------------------------------- #
+
+def init_attention(key, cfg) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(ks[0], (d, h, hd), dt),
+        "wk": dense_init(ks[1], (d, kv, hd), dt),
+        "wv": dense_init(ks[2], (d, kv, hd), dt),
+        "wo": dense_init(ks[3], (h, hd, d), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dt)
+        p["bk"] = jnp.zeros((kv, hd), dt)
+        p["bv"] = jnp.zeros((kv, hd), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd, dt)
+        p["k_norm"] = init_rmsnorm(hd, dt)
+    return p
+
+
+def qkv_project(x: jnp.ndarray, p: Params, cfg,
+                positions: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> q (B, S, H, hd), k/v (B, S, KV, hd), RoPE applied."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"], preferred_element_type=F32)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"], preferred_element_type=F32)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"], preferred_element_type=F32)
+    q, k, v = q.astype(x.dtype), k.astype(x.dtype), v.astype(x.dtype)
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def out_project(attn: jnp.ndarray, p: Params) -> jnp.ndarray:
+    return jnp.einsum("bshk,hkd->bsd", attn, p["wo"],
+                      preferred_element_type=F32).astype(attn.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# core attention math (GQA grouping)                                          #
+# --------------------------------------------------------------------------- #
+
+def _gqa_scores(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """q (B,Sq,KV,G,hd) x k (B,Sk,KV,hd) -> scores (B,KV,G,Sq,Sk) in f32."""
+    return jnp.einsum("bqkgd,bskd->bkgqs", q, k, preferred_element_type=F32)
+
+
+def _gqa_mix(w: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """w (B,KV,G,Sq,Sk) x v (B,Sk,KV,hd) -> (B,Sq,KV,G,hd)."""
+    return jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(w.dtype))
+
+
+def _split_groups(q: jnp.ndarray, n_kv: int) -> jnp.ndarray:
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def _merge_groups(x: jnp.ndarray) -> jnp.ndarray:
+    b, s, kv, g, d = x.shape
+    return x.reshape(b, s, kv * g, d)
+
+
+def attention_full(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   causal: bool = True,
+                   q_offset: int = 0) -> jnp.ndarray:
+    """Exact attention. q (B,Sq,H,hd), k/v (B,Sk,KV,hd) -> (B,Sq,H,hd)."""
+    n_kv = k.shape[2]
+    qg = _split_groups(q, n_kv)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = _gqa_scores(qg, k) * scale                   # (B,KV,G,Sq,Sk)
+    if causal:
+        sq, sk = scores.shape[-2], scores.shape[-1]
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(sk)
+        mask = kpos[None, :] <= qpos[:, None]
+        scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_mix(w.astype(v.dtype), v)
+    return _merge_groups(out)
+
+
+def attention_chunked(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      chunk: int = 1024, causal: bool = True,
+                      unroll: bool = False) -> jnp.ndarray:
+    """Query-chunked attention via lax.scan (self-attention, Sq == Sk).
+
+    Working set per step: (B, KV, G, chunk, S) f32 scores — the O(S^2)
+    buffer never materializes.  Each chunk is checkpointed so backward
+    recomputes scores instead of saving them.
+    """
+    b, s, h, hd = q.shape
+    if s % chunk != 0 or s <= chunk:
+        return attention_full(q, k, v, causal=causal)
+    n_kv = k.shape[2]
+    qg = _split_groups(q, n_kv)                           # (B,S,KV,G,hd)
+    n_chunks = s // chunk
+    qg = qg.reshape(b, n_chunks, chunk, n_kv, h // n_kv, hd)
+    qg = jnp.moveaxis(qg, 1, 0)                           # (C,B,chunk,KV,G,hd)
+
+    def step(carry, xs):
+        qc, off = xs
+        scale = 1.0 / math.sqrt(hd)
+        scores = _gqa_scores(qc, k) * scale               # (B,KV,G,chunk,S)
+        if causal:
+            qpos = jnp.arange(chunk) + off
+            kpos = jnp.arange(s)
+            mask = kpos[None, :] <= qpos[:, None]
+            scores = jnp.where(mask, scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)
+        out = _gqa_mix(w.astype(v.dtype), v)              # (B,chunk,KV,G,hd)
+        return carry, out
+
+    offsets = jnp.arange(n_chunks) * chunk
+    from .unroll import scan_or_unroll
+    _, outs = scan_or_unroll(jax.checkpoint(step), None, (qg, offsets), unroll)
+    outs = jnp.moveaxis(outs, 0, 1)                       # (B,C,chunk,KV,G,hd)
+    outs = outs.reshape(b, s, n_kv, h // n_kv, hd)
+    return _merge_groups(outs)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     cache_len: jnp.ndarray) -> jnp.ndarray:
+    """One-token decode. q (B,1,H,hd); caches (B,S,KV,hd); cache_len (B,)
+    valid prefix lengths (the new token's k/v must already be written)."""
+    n_kv = k_cache.shape[2]
+    qg = _split_groups(q, n_kv)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = _gqa_scores(qg, k_cache) * scale             # (B,KV,G,1,S)
+    s = k_cache.shape[1]
+    valid = jnp.arange(s)[None, :] < cache_len[:, None]   # (B,S)
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_mix(w.astype(v_cache.dtype), v_cache)
+    return _merge_groups(out)

@@ -1,0 +1,201 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+Encoder: bidirectional self-attention over projected audio-frame
+embeddings (the speech frontend is a stub — ``input_specs`` provides
+precomputed fbank-stack features).  Decoder: causal self-attention +
+cross-attention over encoder output.  Both stacks scan over layers.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from .unroll import scan_or_unroll
+from .layers import (F32, apply_ffn, dense_init, embed_tokens, init_embedding,
+                     init_ffn, init_rmsnorm, rms_norm, unembed, _dtype)
+
+Params = Dict[str, Any]
+
+
+def _init_enc_layer(key, cfg):
+    dt = _dtype(cfg.dtype)
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln_attn": init_rmsnorm(cfg.d_model, dt),
+        "attn": attn.init_attention(k1, cfg),
+        "ln_ffn": init_rmsnorm(cfg.d_model, dt),
+        "ffn": init_ffn(k2, cfg.d_model, cfg.d_ff, cfg.act, dt),
+    }
+
+
+def _init_dec_layer(key, cfg):
+    dt = _dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln_self": init_rmsnorm(cfg.d_model, dt),
+        "self_attn": attn.init_attention(k1, cfg),
+        "ln_cross": init_rmsnorm(cfg.d_model, dt),
+        "cross_attn": attn.init_attention(k2, cfg),
+        "ln_ffn": init_rmsnorm(cfg.d_model, dt),
+        "ffn": init_ffn(k3, cfg.d_model, cfg.d_ff, cfg.act, dt),
+    }
+
+
+def init_encdec(key, cfg) -> Params:
+    dt = _dtype(cfg.dtype)
+    e = cfg.encdec
+    ks = jax.random.split(key, 6)
+    ekeys = jax.random.split(ks[0], e.n_encoder_layers)
+    dkeys = jax.random.split(ks[1], e.n_decoder_layers)
+    return {
+        "frontend_proj": dense_init(ks[2], (cfg.frontend.feature_dim,
+                                            cfg.d_model), dt),
+        "embed": init_embedding(ks[3], cfg.vocab_size, cfg.d_model, dt),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(ekeys),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dkeys),
+        "ln_enc": init_rmsnorm(cfg.d_model, dt),
+        "ln_f": init_rmsnorm(cfg.d_model, dt),
+        "unembed": dense_init(ks[4], (cfg.vocab_size, cfg.d_model), dt, 0.02),
+    }
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+
+def encode(params, cfg, features: jnp.ndarray) -> jnp.ndarray:
+    """features: (B, S_enc, feat) -> (B, S_enc, D)."""
+    x = jnp.einsum("bsf,fd->bsd", features, params["frontend_proj"],
+                   preferred_element_type=F32).astype(
+        _dtype(cfg.dtype))
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+        q, k, v = attn.qkv_project(h, lp["attn"], cfg, positions)
+        o = attn.attention_chunked(q, k, v, chunk=cfg.attn_chunk, causal=False, unroll=cfg.unroll)
+        x = x + attn.out_project(o, lp["attn"])
+        h = rms_norm(x, lp["ln_ffn"], cfg.norm_eps)
+        return x + apply_ffn(h, lp["ffn"], cfg.act), None
+
+    x, _ = scan_or_unroll(_remat(body, cfg), x, params["enc_layers"],
+                          cfg.unroll)
+    return rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def _dec_layer_train(x, lp, cfg, enc_out, positions):
+    h = rms_norm(x, lp["ln_self"], cfg.norm_eps)
+    q, k, v = attn.qkv_project(h, lp["self_attn"], cfg, positions)
+    o = attn.attention_chunked(q, k, v, chunk=cfg.attn_chunk, causal=True, unroll=cfg.unroll)
+    x = x + attn.out_project(o, lp["self_attn"])
+    h = rms_norm(x, lp["ln_cross"], cfg.norm_eps)
+    enc_pos = jnp.arange(enc_out.shape[1])[None, :]
+    qc, _, _ = attn.qkv_project(h, lp["cross_attn"], cfg, positions)
+    _, kc, vc = attn.qkv_project(enc_out, lp["cross_attn"], cfg, enc_pos)
+    oc = attn.attention_full(qc, kc, vc, causal=False)
+    x = x + attn.out_project(oc, lp["cross_attn"])
+    h = rms_norm(x, lp["ln_ffn"], cfg.norm_eps)
+    return x + apply_ffn(h, lp["ffn"], cfg.act)
+
+
+def encdec_train_logits(params, cfg, batch) -> Tuple[jnp.ndarray, Dict]:
+    """batch: {'features': (B,S_enc,F), 'tokens': (B,S_dec)}."""
+    enc_out = encode(params, cfg, batch["features"])
+    x = embed_tokens(batch["tokens"], params["embed"])
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(x, lp):
+        return _dec_layer_train(x, lp, cfg, enc_out, positions), None
+
+    x, _ = scan_or_unroll(_remat(body, cfg), x, params["dec_layers"],
+                          cfg.unroll)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return unembed(x, params["unembed"]), {
+        "aux_loss": jnp.zeros((), F32),
+        "loss_mask": jnp.ones(batch["tokens"].shape, bool),
+        "targets": batch["tokens"]}
+
+
+def encdec_init_cache(cfg, batch, max_len, enc_len):
+    dt = _dtype(cfg.dtype)
+    l = cfg.encdec.n_decoder_layers
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((l, batch, max_len, kv, hd), dt),
+        "v": jnp.zeros((l, batch, max_len, kv, hd), dt),
+        "xk": jnp.zeros((l, batch, enc_len, kv, hd), dt),   # cross K (static)
+        "xv": jnp.zeros((l, batch, enc_len, kv, hd), dt),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def encdec_prefill(params, cfg, batch):
+    """Encode + decoder prompt pass; returns (last logits, cache)."""
+    enc_out = encode(params, cfg, batch["features"])
+    x = embed_tokens(batch["tokens"], params["embed"])
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    enc_pos = jnp.arange(enc_out.shape[1])[None, :]
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln_self"], cfg.norm_eps)
+        q, k, v = attn.qkv_project(h, lp["self_attn"], cfg, positions)
+        o = attn.attention_chunked(q, k, v, chunk=cfg.attn_chunk, causal=True, unroll=cfg.unroll)
+        x = x + attn.out_project(o, lp["self_attn"])
+        h = rms_norm(x, lp["ln_cross"], cfg.norm_eps)
+        qc, _, _ = attn.qkv_project(h, lp["cross_attn"], cfg, positions)
+        _, kc, vc = attn.qkv_project(enc_out, lp["cross_attn"], cfg, enc_pos)
+        oc = attn.attention_full(qc, kc, vc, causal=False)
+        x = x + attn.out_project(oc, lp["cross_attn"])
+        h = rms_norm(x, lp["ln_ffn"], cfg.norm_eps)
+        x = x + apply_ffn(h, lp["ffn"], cfg.act)
+        return x, (k, v, kc, vc)
+
+    x, (k, v, xk, xv) = scan_or_unroll(_remat(body, cfg), x,
+                                       params["dec_layers"], cfg.unroll)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = unembed(x[:, -1:, :], params["unembed"])[:, 0]
+    cache = {"k": k, "v": v, "xk": xk, "xv": xv,
+             "len": jnp.full((b,), s, jnp.int32)}
+    return logits, cache
+
+
+def encdec_decode_step(params, cfg, batch, cache):
+    """One decoder token; cross-attention over the cached encoder K/V."""
+    x = embed_tokens(batch["tokens"], params["embed"])
+    cache_len = cache["len"]
+    positions = cache_len[:, None]
+    enc_len = cache["xk"].shape[2]
+
+    def body(x, inp):
+        lp, kc, vc, xk, xv = inp
+        h = rms_norm(x, lp["ln_self"], cfg.norm_eps)
+        q, k, v = attn.qkv_project(h, lp["self_attn"], cfg, positions)
+        kc = jax.vmap(lambda c, pos, val: jax.lax.dynamic_update_slice(
+            c, val, (pos, 0, 0)))(kc, cache_len, k)
+        vc = jax.vmap(lambda c, pos, val: jax.lax.dynamic_update_slice(
+            c, val, (pos, 0, 0)))(vc, cache_len, v)
+        o = attn.decode_attention(q, kc, vc, cache_len + 1)
+        x = x + attn.out_project(o, lp["self_attn"])
+        h = rms_norm(x, lp["ln_cross"], cfg.norm_eps)
+        qc, _, _ = attn.qkv_project(h, lp["cross_attn"], cfg, positions)
+        full = jnp.full((x.shape[0],), enc_len, jnp.int32)
+        oc = attn.decode_attention(qc, xk, xv, full)
+        x = x + attn.out_project(oc, lp["cross_attn"])
+        h = rms_norm(x, lp["ln_ffn"], cfg.norm_eps)
+        x = x + apply_ffn(h, lp["ffn"], cfg.act)
+        return x, (kc, vc)
+
+    x, (k_new, v_new) = scan_or_unroll(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]), cfg.unroll)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = unembed(x, params["unembed"])
+    cache = dict(cache, k=k_new, v=v_new, len=cache_len + 1)
+    return logits, cache

@@ -1,0 +1,155 @@
+"""Shared model layers: norms, rotary embeddings, FFN variants, embeddings.
+
+Pure-functional JAX: parameters are plain dict pytrees created by the
+``init_*`` helpers, applied by the matching ``apply_*`` functions.  All
+matmuls accumulate in float32 (``preferred_element_type``) regardless of
+the bf16 parameter dtype — the numerically-load-bearing choice for
+training at scale.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+F32 = jnp.float32
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# --------------------------------------------------------------------------- #
+# init helpers                                                                #
+# --------------------------------------------------------------------------- #
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init."""
+    if scale is None:
+        fan_in = shape[0] if len(shape) >= 2 else 1
+        scale = 1.0 / math.sqrt(max(1, fan_in))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, F32) * scale
+            ).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, F32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# norms                                                                       #
+# --------------------------------------------------------------------------- #
+
+def init_rmsnorm(dim: int, dtype) -> Params:
+    return {"scale": jnp.ones((dim,), dtype=dtype)}
+
+
+def rms_norm(x: jnp.ndarray, p: Params, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(F32)).astype(x.dtype)
+
+
+def init_layernorm(dim: int, dtype) -> Params:
+    return {"scale": jnp.ones((dim,), dtype=dtype),
+            "bias": jnp.zeros((dim,), dtype=dtype)}
+
+
+def layer_norm(x: jnp.ndarray, p: Params, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(F32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(F32) + p["bias"].astype(F32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# rotary position embedding                                                   #
+# --------------------------------------------------------------------------- #
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    """(head_dim/2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=F32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotate pairs. x: (..., S, H, D), positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    inv = rope_frequencies(d, theta)                      # (D/2,)
+    ang = positions[..., None].astype(F32) * inv          # (..., S, D/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[..., None, :]                               # (..., S, 1, D/2)
+    cos = cos[..., None, :]
+    x1 = x[..., 0::2].astype(F32)
+    x2 = x[..., 1::2].astype(F32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# FFN                                                                         #
+# --------------------------------------------------------------------------- #
+
+_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+}
+
+
+def init_ffn(key, d_model: int, d_ff: int, act: str, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(k1, (d_model, d_ff), dtype),
+            "w_up": dense_init(k2, (d_model, d_ff), dtype),
+            "w_down": dense_init(k3, (d_ff, d_model), dtype),
+        }
+    return {
+        "w_up": dense_init(k1, (d_model, d_ff), dtype),
+        "w_down": dense_init(k2, (d_ff, d_model), dtype),
+    }
+
+
+def apply_ffn(x: jnp.ndarray, p: Params, act: str) -> jnp.ndarray:
+    if act == "swiglu":
+        g = jax.nn.silu(jnp.einsum("...d,df->...f", x, p["w_gate"],
+                                   preferred_element_type=F32))
+        u = jnp.einsum("...d,df->...f", x, p["w_up"], preferred_element_type=F32)
+        h = (g * u).astype(x.dtype)
+    elif act == "geglu":
+        g = jax.nn.gelu(jnp.einsum("...d,df->...f", x, p["w_gate"],
+                                   preferred_element_type=F32))
+        u = jnp.einsum("...d,df->...f", x, p["w_up"], preferred_element_type=F32)
+        h = (g * u).astype(x.dtype)
+    else:
+        h = _ACTS[act](jnp.einsum("...d,df->...f", x, p["w_up"],
+                                  preferred_element_type=F32)).astype(x.dtype)
+    out = jnp.einsum("...f,fd->...d", h, p["w_down"], preferred_element_type=F32)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# embeddings / unembedding                                                    #
+# --------------------------------------------------------------------------- #
+
+def init_embedding(key, vocab: int, d_model: int, dtype) -> Params:
+    return {"table": embed_init(key, (vocab, d_model), dtype)}
+
+
+def embed_tokens(tokens: jnp.ndarray, p: Params) -> jnp.ndarray:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(x: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Logits in float32 — softmax stability at vocab 256k."""
+    return jnp.einsum("...d,vd->...v", x, table, preferred_element_type=F32)

@@ -1,0 +1,152 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV is compressed to a shared latent ``c_kv`` (kv_lora_rank) plus a
+single decoupled RoPE key (qk_rope_head_dim) — the decode cache stores
+only ``(B, S, kv_lora_rank + rope_dim)`` instead of per-head K/V, an
+~8x cache reduction at 128 heads.
+
+Train path expands the latent to per-head K/V (cleanest for backward);
+decode path keeps the latent cache and expands per step.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import F32, apply_rope, dense_init, init_rmsnorm, rms_norm
+
+Params = Dict[str, Any]
+NEG_INF = -1e30
+
+
+def init_mla(key, cfg) -> Params:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    dt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        # query low-rank path
+        "wq_a": dense_init(ks[0], (d, m.q_lora_rank), dt),
+        "q_a_norm": init_rmsnorm(m.q_lora_rank, dt),
+        "wq_b": dense_init(ks[1], (m.q_lora_rank, h, qk_head), dt),
+        # kv latent path: latent + decoupled rope key
+        "wkv_a": dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim), dt),
+        "kv_a_norm": init_rmsnorm(m.kv_lora_rank, dt),
+        "wk_b": dense_init(ks[3], (m.kv_lora_rank, h, m.qk_nope_head_dim), dt),
+        "wv_b": dense_init(ks[4], (m.kv_lora_rank, h, m.v_head_dim), dt),
+        "wo": dense_init(ks[5], (h, m.v_head_dim, d), dt),
+    }
+
+
+def _project_q(x, p, cfg, positions):
+    m = cfg.mla
+    cq = jnp.einsum("bsd,dr->bsr", x, p["wq_a"], preferred_element_type=F32
+                    ).astype(x.dtype)
+    cq = rms_norm(cq, p["q_a_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"], preferred_element_type=F32
+                   ).astype(x.dtype)
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latent(x, p, cfg, positions):
+    """Returns (c_kv (B,S,R) normalized latent, k_rope (B,S,1,rope))."""
+    m = cfg.mla
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"], preferred_element_type=F32
+                    ).astype(x.dtype)
+    c_kv = rms_norm(kv[..., : m.kv_lora_rank], p["kv_a_norm"], cfg.norm_eps)
+    k_rope = kv[..., m.kv_lora_rank:][:, :, None, :]       # single shared head
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def mla_attention_train(x: jnp.ndarray, p: Params, cfg,
+                        positions: jnp.ndarray) -> jnp.ndarray:
+    """Full-sequence causal MLA (train/prefill). x: (B, S, D)."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    q_nope, q_rope = _project_q(x, p, cfg, positions)
+    c_kv, k_rope = _latent(x, p, cfg, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["wk_b"],
+                        preferred_element_type=F32).astype(x.dtype)
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["wv_b"],
+                   preferred_element_type=F32).astype(x.dtype)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    scores = (jnp.einsum("bqhk,bshk->bhqs", q_nope, k_nope,
+                         preferred_element_type=F32)
+              + jnp.einsum("bqhk,bsxk->bhqs", q_rope, k_rope,
+                           preferred_element_type=F32)) * scale
+    qpos = jnp.arange(s)
+    mask = qpos[None, :] <= qpos[:, None]
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshk->bqhk", w.astype(v.dtype), v)
+    return jnp.einsum("bqhk,hkd->bqd", out, p["wo"],
+                      preferred_element_type=F32).astype(x.dtype)
+
+
+def mla_decode(x: jnp.ndarray, p: Params, cfg,
+               latent_cache: jnp.ndarray, rope_cache: jnp.ndarray,
+               cache_len: jnp.ndarray, positions: jnp.ndarray,
+               latent_scale: jnp.ndarray | None = None):
+    """One-token decode with latent KV cache.
+
+    latent_cache: (B, S, kv_lora_rank); rope_cache: (B, S, rope_dim).
+    With ``latent_scale`` (B, S) the latent cache is int8 (KIVI-style
+    per-position quantization; DESIGN.md §Perf) and dequantized on read.
+    Returns (out (B,1,D), new latent_cache, new rope_cache[, new scale]).
+    """
+    m = cfg.mla
+    b = x.shape[0]
+    q_nope, q_rope = _project_q(x, p, cfg, positions)      # (B,1,H,*)
+    c_kv, k_rope = _latent(x, p, cfg, positions)           # (B,1,R), (B,1,1,rope)
+    if latent_scale is not None:
+        amax = jnp.max(jnp.abs(c_kv.astype(F32)), axis=-1)         # (B,1)
+        scale = jnp.maximum(amax, 1e-6) / 127.0
+        c_q = jnp.clip(jnp.round(c_kv.astype(F32) / scale[..., None]),
+                       -127, 127).astype(jnp.int8)
+        latent_cache = jax.vmap(
+            lambda cache, pos, val: jax.lax.dynamic_update_slice(
+                cache, val, (pos, 0)))(latent_cache, cache_len, c_q)
+        latent_scale = jax.vmap(
+            lambda cache, pos, val: jax.lax.dynamic_update_slice(
+                cache, val, (pos,)))(latent_scale, cache_len, scale)
+    else:
+        latent_cache = jax.vmap(
+            lambda cache, pos, val: jax.lax.dynamic_update_slice(
+                cache, val, (pos, 0)))(latent_cache, cache_len, c_kv)
+    rope_cache = jax.vmap(
+        lambda cache, pos, val: jax.lax.dynamic_update_slice(cache, val, (pos, 0))
+    )(rope_cache, cache_len, k_rope[:, :, 0, :])
+    new_len = cache_len + 1
+
+    # absorbed attention: score against the latent cache directly
+    # q_nope (B,1,H,nope) @ wk_b (R,H,nope) -> q_lat (B,1,H,R)
+    if latent_scale is not None:
+        lat = (latent_cache.astype(F32)
+               * latent_scale[..., None]).astype(x.dtype)   # dequant on read
+    else:
+        lat = latent_cache
+    q_lat = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["wk_b"],
+                       preferred_element_type=F32).astype(x.dtype)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    scores = (jnp.einsum("bqhr,bsr->bhqs", q_lat, lat,
+                         preferred_element_type=F32)
+              + jnp.einsum("bqhk,bsk->bhqs", q_rope, rope_cache,
+                           preferred_element_type=F32)) * scale
+    s = latent_cache.shape[1]
+    valid = jnp.arange(s)[None, :] < new_len[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    # mix latents, then expand through wv_b (absorbed-V form)
+    mixed = jnp.einsum("bhqs,bsr->bqhr", w, lat.astype(w.dtype))
+    out = jnp.einsum("bqhr,rhk->bqhk", mixed, p["wv_b"].astype(w.dtype))
+    out = jnp.einsum("bqhk,hkd->bqd", out.astype(x.dtype), p["wo"],
+                     preferred_element_type=F32).astype(x.dtype)
+    return out, latent_cache, rope_cache, latent_scale

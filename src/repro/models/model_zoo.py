@@ -1,0 +1,186 @@
+"""Unified model facade: build any assigned architecture from its config.
+
+``build_model(cfg)`` returns a :class:`Model` whose methods are pure
+functions suitable for ``jax.jit`` / ``.lower()``:
+
+  * ``init_params(rng)``                   — parameter pytree
+  * ``train_logits(params, batch)``        — (logits, aux)
+  * ``prefill(params, batch)``             — (last logits, cache)
+  * ``decode_step(params, batch, cache)``  — (logits, cache)
+  * ``init_cache(batch, max_len)``         — decode cache pytree
+  * ``input_specs(shape)``                 — ShapeDtypeStruct stand-ins for
+    every model input of an assignment shape (dry-run: zero allocation)
+
+Modality frontends are STUBS per the assignment: ``input_specs`` provides
+precomputed frame/patch embeddings.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+from . import encdec as encdec_mod
+from . import hybrid as hybrid_mod
+from . import transformer as tfm
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------- #
+# analytic parameter counts (roofline MODEL_FLOPS = 6 N D)                     #
+# --------------------------------------------------------------------------- #
+
+def count_params_analytic(cfg: ArchConfig, active_only: bool = False) -> int:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    glu = 3 if cfg.act in ("swiglu", "geglu") else 2
+
+    def attn_params():
+        if cfg.mla is not None:
+            m = cfg.mla
+            qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+            return (d * m.q_lora_rank + m.q_lora_rank * h * qk
+                    + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                    + m.kv_lora_rank * h * (m.qk_nope_head_dim + m.v_head_dim)
+                    + h * m.v_head_dim * d)
+        return d * h * hd + 2 * d * kv * hd + h * hd * d
+
+    def dense_ffn(ff):
+        return glu * d * ff
+
+    total = cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+
+    if cfg.family in ("dense", "vlm"):
+        total += cfg.n_layers * (attn_params() + dense_ffn(cfg.d_ff))
+        if cfg.family == "vlm":
+            total += cfg.frontend.feature_dim * d + d * d
+    elif cfg.family == "moe":
+        m = cfg.moe
+        nd = m.first_dense_layers
+        per_moe = (attn_params() + d * m.n_experts
+                   + ((m.top_k if active_only else m.n_experts)
+                      * glu * d * m.d_ff_expert)
+                   + glu * d * m.d_ff_shared * m.n_shared_experts)
+        total += nd * (attn_params() + dense_ffn(cfg.d_ff))
+        total += (cfg.n_layers - nd) * per_moe
+    elif cfg.family == "audio":
+        e = cfg.encdec
+        enc = attn_params() + dense_ffn(cfg.d_ff)
+        dec = 2 * attn_params() + dense_ffn(cfg.d_ff)
+        total += e.n_encoder_layers * enc + e.n_decoder_layers * dec
+        total += cfg.frontend.feature_dim * d
+    elif cfg.family == "hybrid":
+        s = cfg.ssm
+        di = s.expand * d
+        heads = di // s.head_dim
+        mamba = (d * (2 * di + 2 * s.n_groups * s.d_state + heads)
+                 + s.d_conv * (di + 2 * s.n_groups * s.d_state)
+                 + di * d)
+        total += cfg.n_layers * mamba
+        total += cfg.n_shared_attn_blocks * (attn_params() + dense_ffn(cfg.d_ff))
+    elif cfg.family == "ssm":
+        x = cfg.xlstm
+        di = int(x.proj_factor_mlstm * d)
+        hd_i = di // cfg.n_heads
+        mlstm = (d * 2 * di + x.conv_kernel * di + 3 * di * cfg.n_heads * hd_i
+                 + 2 * di * cfg.n_heads + di * d)
+        slstm = d * 4 * d + cfg.n_heads * (d // cfg.n_heads) * 4 * (d // cfg.n_heads) + d * d
+        k = x.slstm_every
+        n_s = cfg.n_layers // k
+        total += (cfg.n_layers - n_s) * mlstm + n_s * slstm
+    return int(total)
+
+
+# --------------------------------------------------------------------------- #
+# Model facade                                                                #
+# --------------------------------------------------------------------------- #
+
+@dataclass
+class Model:
+    cfg: ArchConfig
+    init_params: Callable
+    train_logits: Callable          # (params, batch) -> (logits, aux)
+    prefill: Callable               # (params, batch) -> (last_logits, cache)
+    decode_step: Callable           # (params, batch, cache) -> (logits, cache)
+    init_cache: Callable            # (batch, max_len) -> cache
+
+    # -- dry-run input specs ------------------------------------------------ #
+
+    def input_specs(self, shape: ShapeSpec) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for the given assignment shape."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        f32 = jnp.float32
+        sds = jax.ShapeDtypeStruct
+        if shape.kind == "train" or shape.kind == "prefill":
+            if cfg.family == "audio":
+                return {"features": sds((b, s, cfg.frontend.feature_dim), f32),
+                        "tokens": sds((b, s), i32)}
+            if cfg.family == "vlm":
+                npatch = cfg.frontend.n_positions
+                return {"tokens": sds((b, s - npatch), i32),
+                        "patches": sds((b, npatch, cfg.frontend.feature_dim), f32)}
+            return {"tokens": sds((b, s), i32)}
+        # decode: one new token against a cache of length s
+        return {"tokens": sds((b, 1), i32)}
+
+    def cache_specs(self, shape: ShapeSpec) -> Any:
+        """Shape-only decode cache (len = s - 1: the cache holds the
+        seq_len-1 old tokens; the new token extends it to seq_len)."""
+        b, s = shape.global_batch, shape.seq_len
+        if self.cfg.family == "audio":
+            return jax.eval_shape(
+                lambda: encdec_mod.encdec_init_cache(self.cfg, b, s, s))
+        return jax.eval_shape(lambda: self.init_cache(b, s))
+
+    def param_specs(self, rng=None) -> Params:
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        return jax.eval_shape(self.init_params, rng)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        return Model(
+            cfg=cfg,
+            init_params=lambda rng: tfm.init_params(rng, cfg),
+            train_logits=lambda p, b: tfm.train_logits(p, cfg, b),
+            prefill=lambda p, b: tfm.prefill(p, cfg, b),
+            decode_step=lambda p, b, c: tfm.decode_step(p, cfg, b, c),
+            init_cache=lambda b, m: tfm.init_cache(cfg, b, m),
+        )
+    if fam == "audio":
+        return Model(
+            cfg=cfg,
+            init_params=lambda rng: encdec_mod.init_encdec(rng, cfg),
+            train_logits=lambda p, b: encdec_mod.encdec_train_logits(p, cfg, b),
+            prefill=lambda p, b: encdec_mod.encdec_prefill(p, cfg, b),
+            decode_step=lambda p, b, c: encdec_mod.encdec_decode_step(p, cfg, b, c),
+            init_cache=lambda b, m: encdec_mod.encdec_init_cache(cfg, b, m, m),
+        )
+    if fam == "hybrid":
+        return Model(
+            cfg=cfg,
+            init_params=lambda rng: hybrid_mod.init_zamba(rng, cfg),
+            train_logits=lambda p, b: hybrid_mod.zamba_train_logits(p, cfg, b),
+            prefill=lambda p, b: hybrid_mod.zamba_prefill(p, cfg, b),
+            decode_step=lambda p, b, c: hybrid_mod.zamba_decode_step(p, cfg, b, c),
+            init_cache=lambda b, m: hybrid_mod.zamba_init_cache(cfg, b, m),
+        )
+    if fam == "ssm":
+        return Model(
+            cfg=cfg,
+            init_params=lambda rng: hybrid_mod.init_xlstm_stack(rng, cfg),
+            train_logits=lambda p, b: hybrid_mod.xlstm_train_logits(p, cfg, b),
+            prefill=lambda p, b: hybrid_mod.xlstm_prefill(p, cfg, b),
+            decode_step=lambda p, b, c: hybrid_mod.xlstm_decode_step(p, cfg, b, c),
+            init_cache=lambda b, m: hybrid_mod.xlstm_init_cache(cfg, b, m),
+        )
+    raise ValueError(f"unknown family {fam!r}")

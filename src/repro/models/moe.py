@@ -1,0 +1,151 @@
+"""Mixture-of-Experts FFN: top-k routing, shared experts, EP-shardable.
+
+Dispatch uses the sort-based static-capacity formulation (MaxText /
+Switch-style): tokens are permuted into an ``(E, capacity, d)`` buffer by
+router assignment, each expert runs a dense GLU on its buffer, and
+results scatter back weighted by router gates.  All shapes are static
+(jit-friendly); tokens over capacity drop (standard capacity-factor
+semantics), tracked by the aux outputs.
+
+Sharding: the expert axis maps to the ``model`` mesh axis (expert
+parallelism); with FSDP the per-expert weight matrices additionally shard
+their d_model/d_ff dims over ``data``.  XLA/GSPMD inserts the all-to-all
+at the (tokens -> expert buffer) boundary.
+
+The PFCS integration (serving tier) consumes ``router_top_idx`` from the
+aux dict: each token batch's active-expert set becomes a composite in the
+expert-cache registry (see ``repro.serving.expert_cache``).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import F32, apply_ffn, dense_init, init_ffn
+
+Params = Dict[str, Any]
+
+
+def _constrain(x, spec_entries):
+    """with_sharding_constraint against the ambient mesh; silently a no-op
+    when no mesh (or no matching axes) is active (smoke tests, examples)."""
+    try:
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(x, P(*spec_entries))
+    except Exception:
+        return x
+
+
+def init_moe(key, cfg) -> Params:
+    m = cfg.moe
+    d = cfg.d_model
+    dt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+    ks = jax.random.split(key, 6)
+    p: Params = {
+        "router": dense_init(ks[0], (d, m.n_experts), jnp.float32),  # f32 router
+        "w_gate": dense_init(ks[1], (m.n_experts, d, m.d_ff_expert), dt),
+        "w_up": dense_init(ks[2], (m.n_experts, d, m.d_ff_expert), dt),
+        "w_down": dense_init(ks[3], (m.n_experts, m.d_ff_expert, d), dt),
+    }
+    if m.n_shared_experts > 0:
+        p["shared"] = init_ffn(ks[4], d, m.d_ff_shared * m.n_shared_experts,
+                               cfg.act, dt)
+    return p
+
+
+def _capacity(n_tokens: int, m) -> int:
+    cap = int(math.ceil(n_tokens * m.top_k / m.n_experts * m.capacity_factor))
+    return max(8, -(-cap // 8) * 8)  # round up to 8 for lane alignment
+
+
+def apply_moe(x: jnp.ndarray, p: Params, cfg) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B, S, D) -> (B, S, D), aux (load-balance loss, router stats)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+
+    # --- routing (f32 for numerics) --------------------------------------- #
+    logits = jnp.einsum("td,de->te", xt.astype(F32), p["router"])      # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, top_idx = jax.lax.top_k(probs, m.top_k)                 # (T,K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)                        # renorm
+
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean(axis=0)                                            # (E,)
+    onehot_top1 = jax.nn.one_hot(top_idx[:, 0], m.n_experts, dtype=F32)
+    ce = onehot_top1.mean(axis=0)
+    aux_loss = m.n_experts * jnp.sum(me * ce) * m.router_aux_weight
+
+    # --- sort-based dispatch ---------------------------------------------- #
+    cap = _capacity(t, m)
+    flat_expert = top_idx.reshape(-1)                                  # (T*K,)
+    flat_token = jnp.repeat(jnp.arange(t), m.top_k)
+    flat_gate = gate_vals.reshape(-1)
+
+    order = jnp.argsort(flat_expert)                                   # stable
+    se, st, sg = flat_expert[order], flat_token[order], flat_gate[order]
+    # rank within expert: position - start offset of that expert's run
+    counts = jnp.bincount(se, length=m.n_experts)                      # (E,)
+    starts = jnp.cumsum(counts) - counts                               # (E,)
+    rank = jnp.arange(t * m.top_k) - starts[se]                        # (TK,)
+    keep = rank < cap                                                  # drops
+    slot = jnp.where(keep, se * cap + rank, t * m.top_k)  # overflow -> OOB
+
+    # gather tokens into (E*cap, d); OOB slots scatter-drop
+    buf = jnp.zeros((m.n_experts * cap, d), dtype=x.dtype)
+    buf = buf.at[jnp.clip(slot, 0, m.n_experts * cap - 1)].add(
+        jnp.where(keep[:, None], xt[st], 0).astype(x.dtype))
+    buf = buf.reshape(m.n_experts, cap, d)
+    if cfg.shard_moe_dispatch:
+        # Keep FSDP-sharded expert weights IN PLACE: d-shard the dispatch
+        # buffer so the expert matmul contracts d locally (partial sums
+        # reduce over 'data') instead of all-gathering E/16 x d x 3ff of
+        # weights per layer — the decode-path collective killer.
+        buf = _constrain(buf, ("model", None, "data"))
+
+    # --- expert computation (grouped GLU einsum over E) ------------------- #
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"],
+                               preferred_element_type=F32))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"], preferred_element_type=F32)
+    h = (g * u).astype(x.dtype)
+    if cfg.shard_moe_dispatch:
+        h = _constrain(h, ("model", None, None))
+    eo = jnp.einsum("ecf,efd->ecd", h, p["w_down"],
+                    preferred_element_type=F32).astype(x.dtype)         # (E,cap,d)
+
+    # --- combine back ------------------------------------------------------ #
+    eo_flat = eo.reshape(m.n_experts * cap, d)
+    if cfg.moe_combine == "gather":
+        # inverse-permutation gather + einsum combine: bf16 gather and a
+        # dense (T,K,d)x(T,K) contraction replace the f32 scatter-add —
+        # ~2x less combine traffic, no atomic scatter in the backward.
+        inv = jnp.zeros((t * m.top_k,), jnp.int32).at[order].set(
+            jnp.clip(slot, 0, m.n_experts * cap - 1).astype(jnp.int32))
+        keep_tk = jnp.zeros((t * m.top_k,), bool).at[order].set(keep)
+        gathered = eo_flat[inv].reshape(t, m.top_k, d)                  # bf16
+        w_tk = jnp.where(keep_tk.reshape(t, m.top_k), gate_vals, 0.0)
+        out = jnp.einsum("tkd,tk->td", gathered, w_tk,
+                         preferred_element_type=F32)
+    else:
+        gathered = eo_flat[jnp.clip(slot, 0, m.n_experts * cap - 1)]    # (TK,d)
+        gathered = jnp.where(keep[:, None], gathered, 0)
+        weighted = gathered.astype(F32) * sg[:, None]
+        out = jnp.zeros((t, d), dtype=F32).at[st].add(weighted)
+
+    # --- shared experts (dense branch) -------------------------------------- #
+    if "shared" in p:
+        out = out + apply_ffn(xt, p["shared"], cfg.act).astype(F32)
+
+    aux = {
+        "moe_aux_loss": aux_loss,
+        "router_top_idx": top_idx,          # (T, K) — PFCS expert-cache feed
+        "dropped_frac": 1.0 - keep.mean(),
+        "expert_load": counts,
+    }
+    return out.astype(x.dtype).reshape(b, s, d), aux

@@ -1,0 +1,232 @@
+"""Mamba-2 (SSD) block: chunked-scan training path + recurrent decode.
+
+Structure per arXiv:2405.21060 (state-space duality):
+
+  in_proj -> [z | x | B | C | dt]; causal depthwise conv over (x,B,C);
+  SSD with per-head scalar decay a_t = exp(dt_t * A_h); gated RMSNorm;
+  out_proj.
+
+The training path is the exact chunked algorithm: intra-chunk quadratic
+attention-like term + inter-chunk recurrent state carried through a
+``lax.scan`` (chunk_size from config; the (Q x Q) decay matrix is the
+only quadratic buffer and never exceeds one chunk).  The decode path is
+the O(1) recurrence ``S <- a S + dt B x^T; y = C.S + D x`` over state
+``(B, H, N, P)``.
+
+A hypothesis property test asserts chunked == naive recurrence.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import F32, dense_init, init_rmsnorm, rms_norm
+
+Params = Dict[str, Any]
+
+
+def ssm_dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def init_mamba2(key, cfg) -> Params:
+    s = cfg.ssm
+    d_inner, h, conv_dim = ssm_dims(cfg)
+    dt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+    ks = jax.random.split(key, 5)
+    d_in_proj = 2 * d_inner + 2 * s.n_groups * s.d_state + h
+    return {
+        "in_proj": dense_init(ks[0], (cfg.d_model, d_in_proj), dt),
+        "conv_w": dense_init(ks[1], (s.d_conv, conv_dim), dt, scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": init_rmsnorm(d_inner, dt),
+        "out_proj": dense_init(ks[2], (d_inner, cfg.d_model), dt),
+    }
+
+
+def _split_proj(xz, cfg):
+    s = cfg.ssm
+    d_inner, h, _ = ssm_dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, x, B, C, dt = jnp.split(
+        xz, [d_inner, 2 * d_inner, 2 * d_inner + gn, 2 * d_inner + 2 * gn],
+        axis=-1)
+    return z, x, B, C, dt
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: jnp.ndarray | None = None):
+    """Depthwise causal conv. x: (B,S,C), w: (K,C).  With ``state``
+    ((B,K-1,C) trailing inputs) performs the streaming update and returns
+    (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+    else:
+        xp = jnp.concatenate([state, x], axis=1)
+    # windowed dot: y_t = sum_k w_k * x_{t-K+1+k}
+    ys = sum(xp[:, i : i + x.shape[1], :].astype(F32) * w[i].astype(F32)
+             for i in range(k))
+    y = jax.nn.silu(ys + b.astype(F32)).astype(x.dtype)
+    new_state = xp[:, -(k - 1):, :] if k > 1 else xp[:, :0, :]
+    return y, new_state
+
+
+# --------------------------------------------------------------------------- #
+# SSD core                                                                    #
+# --------------------------------------------------------------------------- #
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, unroll: bool = False):
+    """Exact SSD via chunked scan.
+
+    x  : (B, S, H, P)   per-head inputs
+    dt : (B, S, H)      softplus'd step sizes
+    A  : (H,)           negative decay rates
+    Bm : (B, S, G, N)   input maps (groups broadcast over heads)
+    Cm : (B, S, G, N)   output maps
+    -> y (B, S, H, P)
+    """
+    b, s, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    hg = h // g
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    xdt = (x.astype(F32) * dt.astype(F32)[..., None])          # dt premultiplied
+    a = dt.astype(F32) * A[None, None, :]                       # (B,S,H) log-decay
+
+    def rs(t, extra):  # (B,S,...) -> (nc, B, chunk, ...)
+        return jnp.moveaxis(t.reshape(b, nc, chunk, *extra), 1, 0)
+
+    xc = rs(xdt, (h, p))
+    ac = rs(a, (h,))
+    Bc = rs(Bm.astype(F32), (g, n))
+    Cc = rs(Cm.astype(F32), (g, n))
+
+    def chunk_step(S_prev, inp):
+        xk, ak, Bk, Ck = inp          # (B,chunk,H,P), (B,chunk,H), (B,chunk,G,N)
+        l = jnp.cumsum(ak, axis=1)    # (B,chunk,H) cumulative log-decay
+        ltot = l[:, -1, :]            # (B,H)
+        # intra-chunk: scores[i,j] = exp(l_i - l_j) * (C_i . B_j), j <= i
+        Bh = Bk.reshape(b, chunk, g, 1, n)
+        Ch = Ck.reshape(b, chunk, g, 1, n)
+        cb = jnp.einsum("bigxn,bjgxn->bgij", Ch, Bh)            # (B,G,Q,Q)
+        cb = jnp.repeat(cb, hg, axis=1)                         # (B,H,Q,Q)
+        decay = l[:, :, None, :].transpose(0, 3, 1, 2) - \
+            l[:, None, :, :].transpose(0, 3, 1, 2)              # (B,H,Q,Q) l_i-l_j
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        w = jnp.where(mask[None, None], jnp.exp(decay) * cb, 0.0)
+        y_intra = jnp.einsum("bhij,bjhp->bihp", w, xk)
+        # inter-chunk: contribution of carried state, decayed to position i
+        Ch_full = jnp.repeat(Ck, hg, axis=2).reshape(b, chunk, h, n)
+        y_inter = jnp.einsum("bihn,bhnp->bihp",
+                             Ch_full * jnp.exp(l)[..., None], S_prev)
+        # new state: S = exp(ltot) S_prev + sum_j exp(ltot - l_j) B_j x_j^T
+        wj = jnp.exp(ltot[:, None, :] - l)                      # (B,chunk,H)
+        Bh_full = jnp.repeat(Bk, hg, axis=2).reshape(b, chunk, h, n)
+        S_chunk = jnp.einsum("bjhn,bjhp->bhnp", Bh_full * wj[..., None], xk)
+        S_new = jnp.exp(ltot)[..., None, None] * S_prev + S_chunk
+        return S_new, y_intra + y_inter
+
+    from .unroll import scan_or_unroll
+    S0 = jnp.zeros((b, h, n, p), F32)
+    _, ys = scan_or_unroll(jax.checkpoint(chunk_step), S0, (xc, ac, Bc, Cc),
+                           unroll)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)
+    return y
+
+
+def ssd_recurrent_step(S, x_t, dt_t, A, B_t, C_t):
+    """One decode step.  S: (B,H,N,P); x_t: (B,H,P); dt_t: (B,H);
+    B_t/C_t: (B,G,N) -> (y (B,H,P), S_new)."""
+    b, h, n, p = S.shape
+    g = B_t.shape[1]
+    hg = h // g
+    a = jnp.exp(dt_t.astype(F32) * A[None, :])                  # (B,H)
+    Bh = jnp.repeat(B_t.astype(F32), hg, axis=1)                # (B,H,N)
+    Ch = jnp.repeat(C_t.astype(F32), hg, axis=1)
+    xdt = x_t.astype(F32) * dt_t.astype(F32)[..., None]         # (B,H,P)
+    S_new = a[..., None, None] * S + jnp.einsum("bhn,bhp->bhnp", Bh, xdt)
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, S_new)
+    return y, S_new
+
+
+# --------------------------------------------------------------------------- #
+# full block                                                                  #
+# --------------------------------------------------------------------------- #
+
+def mamba2_block_train(xin: jnp.ndarray, p: Params, cfg) -> jnp.ndarray:
+    """(B,S,D) -> (B,S,D). Pre-norm residual handled by caller."""
+    s_cfg = cfg.ssm
+    d_inner, h, _ = ssm_dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", xin, p["in_proj"],
+                    preferred_element_type=F32).astype(xin.dtype)
+    z, x, B, C, dt = _split_proj(xz, cfg)
+    xbc, _ = _causal_conv(jnp.concatenate([x, B, C], axis=-1),
+                          p["conv_w"], p["conv_b"])
+    x, B, C = jnp.split(xbc, [d_inner, d_inner + s_cfg.n_groups * s_cfg.d_state],
+                        axis=-1)
+    b_, s_, _ = x.shape
+    xh = x.reshape(b_, s_, h, s_cfg.head_dim)
+    Bm = B.reshape(b_, s_, s_cfg.n_groups, s_cfg.d_state)
+    Cm = C.reshape(b_, s_, s_cfg.n_groups, s_cfg.d_state)
+    dt_s = jax.nn.softplus(dt.astype(F32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    y = ssd_chunked(xh, dt_s, A, Bm, Cm, s_cfg.chunk_size,
+                    unroll=cfg.unroll)
+    y = y + xh.astype(F32) * p["D"][None, None, :, None]
+    y = y.reshape(b_, s_, d_inner).astype(xin.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(F32)).astype(xin.dtype),
+                 p["norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"],
+                      preferred_element_type=F32).astype(xin.dtype)
+
+
+def mamba2_init_state(cfg, batch: int, dtype):
+    s = cfg.ssm
+    d_inner, h, conv_dim = ssm_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, h, s.d_state, s.head_dim), jnp.float32),
+    }
+
+
+def mamba2_block_decode(xin: jnp.ndarray, p: Params, cfg, state: Dict
+                        ) -> Tuple[jnp.ndarray, Dict]:
+    """xin: (B,1,D) one token; streaming conv + recurrent SSD."""
+    s_cfg = cfg.ssm
+    d_inner, h, _ = ssm_dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", xin, p["in_proj"],
+                    preferred_element_type=F32).astype(xin.dtype)
+    z, x, B, C, dt = _split_proj(xz, cfg)
+    xbc, conv_state = _causal_conv(jnp.concatenate([x, B, C], axis=-1),
+                                   p["conv_w"], p["conv_b"],
+                                   state=state["conv"])
+    x, B, C = jnp.split(xbc, [d_inner, d_inner + s_cfg.n_groups * s_cfg.d_state],
+                        axis=-1)
+    b_ = x.shape[0]
+    xh = x.reshape(b_, h, s_cfg.head_dim)
+    Bm = B.reshape(b_, s_cfg.n_groups, s_cfg.d_state)
+    Cm = C.reshape(b_, s_cfg.n_groups, s_cfg.d_state)
+    dt_s = jax.nn.softplus(dt.reshape(b_, h).astype(F32) + p["dt_bias"][None, :])
+    A = -jnp.exp(p["A_log"])
+    y, ssm_state = ssd_recurrent_step(state["ssm"], xh, dt_s, A, Bm, Cm)
+    y = y + xh.astype(F32) * p["D"][None, :, None]
+    y = y.reshape(b_, 1, d_inner).astype(xin.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(F32)).astype(xin.dtype),
+                 p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"],
+                     preferred_element_type=F32).astype(xin.dtype)
+    return out, {"conv": conv_state, "ssm": ssm_state}

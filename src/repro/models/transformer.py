@@ -1,0 +1,384 @@
+"""Decoder-only transformer assembly: dense / MoE / MLA / VLM-stub.
+
+Layers are stacked along a leading axis and executed with ``lax.scan``
+(one-layer HLO regardless of depth — essential for 512-device dry-run
+compile times).  Remat policy from config wraps the scanned body.
+
+Three entry points per model:
+  * ``train_logits``  — full-sequence causal forward (loss in train_loop)
+  * ``prefill``       — forward + KV-cache materialization, last logits
+  * ``decode_step``   — one token against the stacked KV cache
+
+VLM ('vlm' family): precomputed patch embeddings are projected and
+prepended to the token embeddings; loss masks the image positions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from .unroll import scan_or_unroll
+from . import mla as mla_mod
+from . import moe as moe_mod
+from .layers import (F32, apply_ffn, dense_init, embed_tokens, init_embedding,
+                     init_ffn, init_rmsnorm, rms_norm, unembed, _dtype)
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------- #
+# init                                                                        #
+# --------------------------------------------------------------------------- #
+
+def _init_layer(key, cfg, moe_layer: bool) -> Params:
+    ks = jax.random.split(key, 4)
+    dt = _dtype(cfg.dtype)
+    p: Params = {
+        "ln_attn": init_rmsnorm(cfg.d_model, dt),
+        "ln_ffn": init_rmsnorm(cfg.d_model, dt),
+    }
+    if cfg.mla is not None:
+        p["attn"] = mla_mod.init_mla(ks[0], cfg)
+    else:
+        p["attn"] = attn.init_attention(ks[0], cfg)
+    if moe_layer:
+        p["moe"] = moe_mod.init_moe(ks[1], cfg)
+    else:
+        p["ffn"] = init_ffn(ks[2], cfg.d_model, cfg.d_ff, cfg.act, dt)
+    return p
+
+
+def init_params(key, cfg) -> Params:
+    dt = _dtype(cfg.dtype)
+    n_dense = cfg.moe.first_dense_layers if cfg.moe else cfg.n_layers
+    n_moe = cfg.n_layers - n_dense
+    keys = jax.random.split(key, 8)
+    p: Params = {
+        "embed": init_embedding(keys[0], cfg.vocab_size, cfg.d_model, dt),
+        "ln_f": init_rmsnorm(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(keys[1], (cfg.vocab_size, cfg.d_model), dt,
+                                  scale=0.02)
+    # dense layers (stacked)
+    if n_dense > 0:
+        lkeys = jax.random.split(keys[2], n_dense)
+        p["dense_layers"] = jax.vmap(
+            lambda k: _init_layer(k, cfg, moe_layer=False))(lkeys)
+    if n_moe > 0:
+        lkeys = jax.random.split(keys[3], n_moe)
+        p["moe_layers"] = jax.vmap(
+            lambda k: _init_layer(k, cfg, moe_layer=True))(lkeys)
+    if cfg.family == "vlm":
+        k1, k2 = jax.random.split(keys[4])
+        fd = cfg.frontend.feature_dim
+        p["vis_proj"] = {
+            "w1": dense_init(k1, (fd, cfg.d_model), dt),
+            "w2": dense_init(k2, (cfg.d_model, cfg.d_model), dt),
+        }
+    return p
+
+
+# --------------------------------------------------------------------------- #
+# layer bodies                                                                #
+# --------------------------------------------------------------------------- #
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.nothing_saveable if cfg.remat == "full"
+              else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _layer_train(x, lp, cfg, positions, moe_layer: bool):
+    h = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+    if cfg.mla is not None:
+        a = mla_mod.mla_attention_train(h, lp["attn"], cfg, positions)
+    else:
+        q, k, v = attn.qkv_project(h, lp["attn"], cfg, positions)
+        o = attn.attention_chunked(q, k, v, chunk=cfg.attn_chunk, causal=True, unroll=cfg.unroll)
+        a = attn.out_project(o, lp["attn"])
+    x = x + a
+    h = rms_norm(x, lp["ln_ffn"], cfg.norm_eps)
+    if moe_layer:
+        f, aux = moe_mod.apply_moe(h, lp["moe"], cfg)
+        return x + f, aux["moe_aux_loss"]
+    return x + apply_ffn(h, lp["ffn"], cfg.act), jnp.zeros((), F32)
+
+
+def _embed_inputs(params, cfg, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (x (B,S,D), loss_mask (B,S))."""
+    x = embed_tokens(batch["tokens"], params["embed"])
+    mask = jnp.ones(batch["tokens"].shape, bool)
+    if cfg.family == "vlm":
+        vp = params["vis_proj"]
+        pe = jnp.einsum("bnf,fd->bnd", batch["patches"], vp["w1"],
+                        preferred_element_type=F32)
+        pe = jax.nn.gelu(pe)
+        pe = jnp.einsum("bnd,de->bne", pe, vp["w2"],
+                        preferred_element_type=F32).astype(x.dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+        mask = jnp.concatenate(
+            [jnp.zeros(pe.shape[:2], bool), mask], axis=1)
+    return x, mask
+
+
+def _run_stack(x, params, cfg, positions):
+    """Scan dense layers then MoE layers.  Returns (x, total_aux_loss)."""
+    aux_total = jnp.zeros((), F32)
+
+    def make_body(moe_layer):
+        def body(carry, lp):
+            x, aux = carry
+            x, a = _layer_train(x, lp, cfg, positions, moe_layer)
+            return (x, aux + a), None
+        return _remat(body, cfg)
+
+    if "dense_layers" in params:
+        (x, aux_total), _ = scan_or_unroll(
+            make_body(False), (x, aux_total), params["dense_layers"],
+            cfg.unroll)
+    if "moe_layers" in params:
+        (x, aux_total), _ = scan_or_unroll(
+            make_body(True), (x, aux_total), params["moe_layers"], cfg.unroll)
+    return x, aux_total
+
+
+def _logits(x, params, cfg):
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    table = params["embed"]["table"] if cfg.tie_embeddings else params["unembed"]
+    return unembed(x, table)
+
+
+def train_logits(params: Params, cfg, batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+    x, loss_mask = _embed_inputs(params, cfg, batch)
+    positions = jnp.arange(x.shape[1])[None, :]
+    x, aux_loss = _run_stack(x, params, cfg, positions)
+    targets = batch["tokens"]
+    if cfg.family == "vlm":  # align targets with the patch-prefixed stream
+        pad = jnp.zeros((targets.shape[0], cfg.frontend.n_positions),
+                        targets.dtype)
+        targets = jnp.concatenate([pad, targets], axis=1)
+    return _logits(x, params, cfg), {"aux_loss": aux_loss,
+                                     "loss_mask": loss_mask,
+                                     "targets": targets}
+
+
+# --------------------------------------------------------------------------- #
+# prefill / decode                                                            #
+# --------------------------------------------------------------------------- #
+
+def init_cache(cfg, batch: int, max_len: int) -> Dict:
+    dt = _dtype(cfg.dtype)
+    l = cfg.n_layers
+    if cfg.mla is not None:
+        m = cfg.mla
+        out = {
+            "latent": jnp.zeros((l, batch, max_len, m.kv_lora_rank), dt),
+            "rope": jnp.zeros((l, batch, max_len, m.qk_rope_head_dim), dt),
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+        if cfg.kv_cache_dtype == "int8":
+            # KIVI/KVQuant-style quantized latent cache: int8 rows + a
+            # per-position f32 scale — halves decode HBM cache traffic.
+            out["latent"] = jnp.zeros((l, batch, max_len, m.kv_lora_rank),
+                                      jnp.int8)
+            out["latent_scale"] = jnp.zeros((l, batch, max_len), jnp.float32)
+        return out
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((l, batch, max_len, kv, hd), dt),
+        "v": jnp.zeros((l, batch, max_len, kv, hd), dt),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def _stacked_layer_params(params, cfg):
+    """Concatenate dense+moe stacks into per-layer scan inputs, with a
+    per-layer moe flag.  Layer param trees differ (ffn vs moe), so we scan
+    dense and moe stacks separately but must interleave caches in layer
+    order — first_dense_layers is a prefix by construction, so caches
+    split cleanly at n_dense."""
+    n_dense = cfg.moe.first_dense_layers if cfg.moe else cfg.n_layers
+    return n_dense
+
+
+def _attn_layer_decode(x, lp, cfg, k_cache, v_cache, cache_len, positions):
+    """One transformer layer, one token.  Caches: (B,S,KV,hd)."""
+    h = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+    q, k, v = attn.qkv_project(h, lp["attn"], cfg, positions)
+    # write new k/v at cache_len
+    k_cache = jax.vmap(
+        lambda c, pos, val: jax.lax.dynamic_update_slice(c, val, (pos, 0, 0))
+    )(k_cache, cache_len, k)
+    v_cache = jax.vmap(
+        lambda c, pos, val: jax.lax.dynamic_update_slice(c, val, (pos, 0, 0))
+    )(v_cache, cache_len, v)
+    o = attn.decode_attention(q, k_cache, v_cache, cache_len + 1)
+    x = x + attn.out_project(o, lp["attn"])
+    h = rms_norm(x, lp["ln_ffn"], cfg.norm_eps)
+    if "moe" in lp:
+        f, _ = moe_mod.apply_moe(h, lp["moe"], cfg)
+        x = x + f
+    else:
+        x = x + apply_ffn(h, lp["ffn"], cfg.act)
+    return x, k_cache, v_cache
+
+
+def _mla_layer_decode(x, lp, cfg, latent_c, rope_c, cache_len, positions,
+                      latent_s=None):
+    h = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+    a, latent_c, rope_c, latent_s = mla_mod.mla_decode(
+        h, lp["attn"], cfg, latent_c, rope_c, cache_len, positions,
+        latent_scale=latent_s)
+    x = x + a
+    h = rms_norm(x, lp["ln_ffn"], cfg.norm_eps)
+    if "moe" in lp:
+        f, _ = moe_mod.apply_moe(h, lp["moe"], cfg)
+        x = x + f
+    else:
+        x = x + apply_ffn(h, lp["ffn"], cfg.act)
+    return x, latent_c, rope_c, latent_s
+
+
+def decode_step(params: Params, cfg, batch: Dict, cache: Dict
+                ) -> Tuple[jnp.ndarray, Dict]:
+    """batch: {'tokens': (B,1)}; returns (logits (B,1,V), new cache)."""
+    x = embed_tokens(batch["tokens"], params["embed"])
+    cache_len = cache["len"]
+    positions = cache_len[:, None]
+    n_dense = _stacked_layer_params(params, cfg)
+
+    if cfg.mla is not None:
+        int8 = cfg.kv_cache_dtype == "int8"
+
+        def body(x, inp):
+            if int8:
+                lp, lat, rp, ls = inp
+            else:
+                (lp, lat, rp), ls = inp, None
+            x, lat, rp, ls = _mla_layer_decode(x, lp, cfg, lat, rp, cache_len,
+                                               positions, ls)
+            return x, ((lat, rp, ls) if int8 else (lat, rp))
+
+        new_lat, new_rp, new_ls = [], [], []
+
+        def run(stack, lat_sl, rp_sl, ls_sl):
+            nonlocal x
+            xs = (stack, lat_sl, rp_sl, ls_sl) if int8 else \
+                (stack, lat_sl, rp_sl)
+            x, ys = scan_or_unroll(body, x, xs, cfg.unroll)
+            new_lat.append(ys[0])
+            new_rp.append(ys[1])
+            if int8:
+                new_ls.append(ys[2])
+
+        ls_all = cache.get("latent_scale")
+        if "dense_layers" in params:
+            run(params["dense_layers"], cache["latent"][:n_dense],
+                cache["rope"][:n_dense],
+                ls_all[:n_dense] if int8 else None)
+        if "moe_layers" in params:
+            run(params["moe_layers"], cache["latent"][n_dense:],
+                cache["rope"][n_dense:],
+                ls_all[n_dense:] if int8 else None)
+        cache = {"latent": jnp.concatenate(new_lat, 0),
+                 "rope": jnp.concatenate(new_rp, 0),
+                 "len": cache_len + 1}
+        if int8:
+            cache["latent_scale"] = jnp.concatenate(new_ls, 0)
+    else:
+        def body(x, inp):
+            lp, kc, vc = inp
+            x, kc, vc = _attn_layer_decode(x, lp, cfg, kc, vc, cache_len,
+                                           positions)
+            return x, (kc, vc)
+        new_k, new_v = [], []
+        if "dense_layers" in params:
+            x, (k0, v0) = scan_or_unroll(
+                body, x, (params["dense_layers"],
+                          cache["k"][:n_dense], cache["v"][:n_dense]),
+                cfg.unroll)
+            new_k.append(k0)
+            new_v.append(v0)
+        if "moe_layers" in params:
+            x, (k1, v1) = scan_or_unroll(
+                body, x, (params["moe_layers"],
+                          cache["k"][n_dense:], cache["v"][n_dense:]),
+                cfg.unroll)
+            new_k.append(k1)
+            new_v.append(v1)
+        cache = {"k": jnp.concatenate(new_k, 0),
+                 "v": jnp.concatenate(new_v, 0),
+                 "len": cache_len + 1}
+    return _logits(x, params, cfg), cache
+
+
+def _attn_layer_prefill(x, lp, cfg, positions, moe_layer):
+    """Full-sequence forward that also returns this layer's k/v."""
+    h = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+    q, k, v = attn.qkv_project(h, lp["attn"], cfg, positions)
+    o = attn.attention_chunked(q, k, v, chunk=cfg.attn_chunk, causal=True, unroll=cfg.unroll)
+    x = x + attn.out_project(o, lp["attn"])
+    h = rms_norm(x, lp["ln_ffn"], cfg.norm_eps)
+    if moe_layer:
+        f, _ = moe_mod.apply_moe(h, lp["moe"], cfg)
+        x = x + f
+    else:
+        x = x + apply_ffn(h, lp["ffn"], cfg.act)
+    return x, k, v
+
+
+def _mla_layer_prefill(x, lp, cfg, positions, moe_layer):
+    h = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+    a = mla_mod.mla_attention_train(h, lp["attn"], cfg, positions)
+    c_kv, k_rope = mla_mod._latent(h, lp["attn"], cfg, positions)
+    x = x + a
+    h = rms_norm(x, lp["ln_ffn"], cfg.norm_eps)
+    if moe_layer:
+        f, _ = moe_mod.apply_moe(h, lp["moe"], cfg)
+        x = x + f
+    else:
+        x = x + apply_ffn(h, lp["ffn"], cfg.act)
+    return x, c_kv, k_rope[:, :, 0, :]
+
+
+def prefill(params: Params, cfg, batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """Process the prompt; returns (last-position logits (B,V), cache)."""
+    x, _ = _embed_inputs(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    n_dense = _stacked_layer_params(params, cfg)
+    mla = cfg.mla is not None
+    layer_fn = _mla_layer_prefill if mla else _attn_layer_prefill
+
+    def make_body(moe_layer):
+        def body(x, lp):
+            x, a, bb = layer_fn(x, lp, cfg, positions, moe_layer)
+            return x, (a, bb)
+        return _remat(body, cfg)
+
+    caches_a, caches_b = [], []
+    if "dense_layers" in params:
+        x, (a0, b0) = scan_or_unroll(make_body(False), x, params["dense_layers"], cfg.unroll)
+        caches_a.append(a0)
+        caches_b.append(b0)
+    if "moe_layers" in params:
+        x, (a1, b1) = scan_or_unroll(make_body(True), x, params["moe_layers"], cfg.unroll)
+        caches_a.append(a1)
+        caches_b.append(b1)
+    a = jnp.concatenate(caches_a, 0)
+    bb = jnp.concatenate(caches_b, 0)
+    new_len = jnp.full((b,), s, jnp.int32)
+    if mla:
+        cache = {"latent": a, "rope": bb, "len": new_len}
+    else:
+        cache = {"k": a, "v": bb, "len": new_len}
+    logits = _logits(x[:, -1:, :], params, cfg)[:, 0, :]
+    return logits, cache

@@ -1,0 +1,33 @@
+"""scan-or-unroll helper.
+
+XLA's ``cost_analysis`` counts a ``lax.scan`` body ONCE regardless of trip
+count, which breaks HLO-derived rooflines for layer-stacked models.  The
+dry-run probe compiles therefore run with ``cfg.unroll=True``: every scan
+site unrolls to a python loop so per-layer (and per-chunk) costs appear
+in full.  Production lowering keeps scans (small HLO, fast compiles).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["scan_or_unroll"]
+
+
+def scan_or_unroll(body, carry, xs, unroll: bool = False):
+    """Drop-in for ``jax.lax.scan(body, carry, xs)``."""
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    if xs is None:
+        raise ValueError("unrolled scan needs explicit xs")
+    length = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(length):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if not ys or ys[0] is None:
+        return carry, None
+    stacked = jax.tree.map(lambda *a: jnp.stack(a, 0), *ys)
+    return carry, stacked

@@ -1,0 +1,285 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, true recurrence).
+
+mLSTM training uses the paper's stabilized parallel form — a decay-gated
+attention-like matrix D with exponential input gates and log-sigmoid
+forget-gate cumsums; decode is the O(1) recurrence over (C, n, m) state.
+sLSTM is inherently sequential (recurrent weight mixing) and trains via
+``lax.scan`` over time.
+
+Simplifications vs the released stack (documented in DESIGN.md): block-
+internal LayerNorm/skip placement follows the paper figure but drops
+learnable per-head out-norms; the sLSTM block uses a single projection
+round instead of the 4/3-factor gated MLP sandwich.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import F32, dense_init, init_rmsnorm, rms_norm
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------- #
+# mLSTM                                                                       #
+# --------------------------------------------------------------------------- #
+
+def init_mlstm(key, cfg) -> Params:
+    x = cfg.xlstm
+    d = cfg.d_model
+    d_inner = int(x.proj_factor_mlstm * d)
+    h = cfg.n_heads
+    hd = d_inner // h
+    dt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * d_inner), dt),      # [x_m | z]
+        "conv_w": dense_init(ks[1], (x.conv_kernel, d_inner), dt, scale=0.5),
+        "conv_b": jnp.zeros((d_inner,), dt),
+        "wq": dense_init(ks[2], (d_inner, h, hd), dt),
+        "wk": dense_init(ks[3], (d_inner, h, hd), dt),
+        "wv": dense_init(ks[4], (d_inner, h, hd), dt),
+        "w_igate": dense_init(ks[5], (d_inner, h), jnp.float32, scale=0.01),
+        "w_fgate": dense_init(ks[6], (d_inner, h), jnp.float32, scale=0.01),
+        "b_igate": jnp.zeros((h,), jnp.float32),
+        "b_fgate": jnp.full((h,), 3.0, jnp.float32),   # init: remember
+        "norm": init_rmsnorm(d_inner, dt),
+        "w_down": dense_init(ks[7], (d_inner, d), dt),
+    }
+
+
+def _mlstm_qkv_gates(x_m, p, cfg):
+    """x_m: (B,S,d_inner) post-conv features -> q,k,v (B,S,H,hd), i,f (B,S,H)."""
+    q = jnp.einsum("bse,ehk->bshk", x_m, p["wq"], preferred_element_type=F32)
+    k = jnp.einsum("bse,ehk->bshk", x_m, p["wk"], preferred_element_type=F32)
+    v = jnp.einsum("bse,ehk->bshk", x_m, p["wv"], preferred_element_type=F32)
+    ig = jnp.einsum("bse,eh->bsh", x_m.astype(F32), p["w_igate"]) + p["b_igate"]
+    fg = jnp.einsum("bse,eh->bsh", x_m.astype(F32), p["w_fgate"]) + p["b_fgate"]
+    return q, k, v, ig, fg
+
+
+def mlstm_parallel(q, k, v, ig, fg):
+    """Stabilized parallel mLSTM.
+
+    q,k,v: (B,S,H,hd) f32; ig,fg: (B,S,H) raw gate pre-activations.
+    Returns (B,S,H,hd).
+    """
+    b, s, h, hd = q.shape
+    logf = jax.nn.log_sigmoid(fg)                         # (B,S,H)
+    fcum = jnp.cumsum(logf, axis=1)                       # sum_{t<=i} log f_t
+    # score[i,j] = fcum_i - fcum_j + ig_j   (decay from j+1..i, gate at j)
+    score = (fcum[:, :, None, :] - fcum[:, None, :, :]
+             + ig[:, None, :, :])                         # (B,Sq,Sk,H)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    score = jnp.where(mask[None, :, :, None], score, -jnp.inf)
+    m = jnp.max(score, axis=2, keepdims=True)             # (B,Sq,1,H)
+    d_mat = jnp.exp(score - m)                            # stabilized decays
+    qk = jnp.einsum("bihd,bjhd->bijh", q, k) / math.sqrt(hd)
+    w = qk * d_mat                                        # (B,Sq,Sk,H)
+    num = jnp.einsum("bijh,bjhd->bihd", w, v)
+    den = jnp.abs(jnp.sum(w, axis=2))                     # (B,Sq,H)
+    den = jnp.maximum(den, jnp.exp(-m[:, :, 0, :]))
+    return num / den[..., None]
+
+
+def mlstm_chunked(q, k, v, ig, fg, chunk: int, unroll: bool = False):
+    """Query-chunked stabilized parallel mLSTM (same math as
+    ``mlstm_parallel``; O(chunk x S) working set via lax.scan)."""
+    b, s, h, hd = q.shape
+    if s % chunk != 0 or s <= chunk:
+        return mlstm_parallel(q, k, v, ig, fg)
+    logf = jax.nn.log_sigmoid(fg)
+    fcum = jnp.cumsum(logf, axis=1)                       # (B,S,H)
+    nc = s // chunk
+    qc = jnp.moveaxis(q.reshape(b, nc, chunk, h, hd), 1, 0)
+    fq = jnp.moveaxis(fcum.reshape(b, nc, chunk, h), 1, 0)
+    offs = jnp.arange(nc) * chunk
+
+    def step(carry, inp):
+        qi, fi, off = inp
+        score = (fi[:, :, None, :] - fcum[:, None, :, :]
+                 + ig[:, None, :, :])                     # (B,chunk,S,H)
+        mask = (jnp.arange(s)[None, :] <= (jnp.arange(chunk) + off)[:, None])
+        score = jnp.where(mask[None, :, :, None], score, -jnp.inf)
+        m = jnp.max(score, axis=2, keepdims=True)
+        d_mat = jnp.exp(score - m)
+        qk = jnp.einsum("bihd,bjhd->bijh", qi, k) / math.sqrt(hd)
+        w = qk * d_mat
+        num = jnp.einsum("bijh,bjhd->bihd", w, v)
+        den = jnp.maximum(jnp.abs(jnp.sum(w, axis=2)),
+                          jnp.exp(-m[:, :, 0, :]))
+        return carry, num / den[..., None]
+
+    from .unroll import scan_or_unroll
+    _, ys = scan_or_unroll(jax.checkpoint(step), None, (qc, fq, offs),
+                           unroll)
+    return jnp.moveaxis(ys, 0, 1).reshape(b, s, h, hd)
+
+
+def mlstm_recurrent_step(state, q, k, v, ig, fg):
+    """One decode step.  state: dict(C (B,H,hd,hd), n (B,H,hd), m (B,H));
+    q,k,v: (B,H,hd); ig,fg: (B,H).  Returns (y (B,H,hd), new state)."""
+    C, n, m = state["C"], state["n"], state["m"]
+    logf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(logf + m, ig)
+    f_sc = jnp.exp(logf + m - m_new)[..., None]
+    i_sc = jnp.exp(ig - m_new)[..., None]
+    hd = q.shape[-1]
+    C_new = f_sc[..., None] * C + i_sc[..., None] * \
+        jnp.einsum("bhk,bhd->bhkd", k / math.sqrt(hd), v)
+    n_new = f_sc * n + i_sc * k / math.sqrt(hd)
+    num = jnp.einsum("bhk,bhkd->bhd", q, C_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, n_new)),
+                      jnp.exp(-m_new))
+    y = num / den[..., None]
+    return y, {"C": C_new, "n": n_new, "m": m_new}
+
+
+def _conv_causal(x, w, b, state=None):
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+    else:
+        xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :].astype(F32) * w[i].astype(F32)
+            for i in range(k))
+    y = jax.nn.silu(y + b.astype(F32)).astype(x.dtype)
+    return y, xp[:, -(k - 1):, :]
+
+
+def mlstm_block_train(xin, p, cfg):
+    d_inner = p["w_down"].shape[0]
+    h = cfg.n_heads
+    hd = d_inner // h
+    up = jnp.einsum("bsd,de->bse", xin, p["w_up"],
+                    preferred_element_type=F32).astype(xin.dtype)
+    x_m, z = jnp.split(up, 2, axis=-1)
+    x_c, _ = _conv_causal(x_m, p["conv_w"], p["conv_b"])
+    q, k, v, ig, fg = _mlstm_qkv_gates(x_c, p, cfg)
+    y = mlstm_chunked(q, k, v, ig, fg, cfg.attn_chunk,
+                      unroll=cfg.unroll)   # (B,S,H,hd) f32
+    y = y.reshape(*y.shape[:2], d_inner).astype(xin.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(F32)).astype(xin.dtype)
+    return jnp.einsum("bse,ed->bsd", y, p["w_down"],
+                      preferred_element_type=F32).astype(xin.dtype)
+
+
+def mlstm_init_state(cfg, batch):
+    x = cfg.xlstm
+    d_inner = int(x.proj_factor_mlstm * cfg.d_model)
+    h = cfg.n_heads
+    hd = d_inner // h
+    return {
+        "conv": jnp.zeros((batch, x.conv_kernel - 1, d_inner),
+                          {"bfloat16": jnp.bfloat16,
+                           "float32": jnp.float32}[cfg.dtype]),
+        "C": jnp.zeros((batch, h, hd, hd), F32),
+        "n": jnp.zeros((batch, h, hd), F32),
+        "m": jnp.full((batch, h), -1e30, F32),
+    }
+
+
+def mlstm_block_decode(xin, p, cfg, state):
+    d_inner = p["w_down"].shape[0]
+    h = cfg.n_heads
+    up = jnp.einsum("bsd,de->bse", xin, p["w_up"],
+                    preferred_element_type=F32).astype(xin.dtype)
+    x_m, z = jnp.split(up, 2, axis=-1)
+    x_c, conv_state = _conv_causal(x_m, p["conv_w"], p["conv_b"],
+                                   state=state["conv"])
+    q, k, v, ig, fg = _mlstm_qkv_gates(x_c, p, cfg)
+    cell = {"C": state["C"], "n": state["n"], "m": state["m"]}
+    y, cell = mlstm_recurrent_step(cell, q[:, 0], k[:, 0], v[:, 0],
+                                   ig[:, 0], fg[:, 0])
+    y = y.reshape(y.shape[0], 1, d_inner).astype(xin.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(F32)).astype(xin.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_down"],
+                     preferred_element_type=F32).astype(xin.dtype)
+    return out, {"conv": conv_state, **cell}
+
+
+# --------------------------------------------------------------------------- #
+# sLSTM                                                                       #
+# --------------------------------------------------------------------------- #
+
+def init_slstm(key, cfg) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    dt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+    ks = jax.random.split(key, 3)
+    return {
+        # input projection to 4 gates (i, f, z, o) per head
+        "w_x": dense_init(ks[0], (d, h, 4 * hd), dt),
+        # recurrent per-head mixing (block-diagonal R)
+        "w_r": dense_init(ks[1], (h, hd, 4 * hd), dt, scale=0.05),
+        "bias": jnp.zeros((h, 4 * hd), jnp.float32),
+        "norm": init_rmsnorm(d, dt),
+        "w_out": dense_init(ks[2], (d, d), dt),
+    }
+
+
+def slstm_step(carry, gates_x, p, cfg):
+    """carry: (h_prev (B,H,hd), c, n, m); gates_x: (B,H,4hd) input part."""
+    h_prev, c_prev, n_prev, m_prev = carry
+    rec = jnp.einsum("bhk,hkg->bhg", h_prev.astype(F32),
+                     p["w_r"].astype(F32))
+    z_all = gates_x.astype(F32) + rec + p["bias"][None]
+    hd = h_prev.shape[-1]
+    i_raw, f_raw, z_raw, o_raw = jnp.split(z_all, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(logf + m_prev, i_raw)
+    i_sc = jnp.exp(i_raw - m_new)
+    f_sc = jnp.exp(logf + m_prev - m_new)
+    z_t = jnp.tanh(z_raw)
+    o_t = jax.nn.sigmoid(o_raw)
+    c_new = f_sc * c_prev + i_sc * z_t
+    n_new = f_sc * n_prev + i_sc
+    h_new = o_t * c_new / jnp.maximum(n_new, 1.0)
+    return (h_new, c_new, n_new, m_new), h_new
+
+
+def slstm_block_train(xin, p, cfg):
+    b, s, d = xin.shape
+    h = cfg.n_heads
+    hd = d // h
+    gx = jnp.einsum("bsd,dhg->bshg", xin, p["w_x"],
+                    preferred_element_type=F32)                # (B,S,H,4hd)
+    init = (jnp.zeros((b, h, hd), F32), jnp.zeros((b, h, hd), F32),
+            jnp.zeros((b, h, hd), F32), jnp.full((b, h, hd), -1e30, F32))
+    step = lambda c, g: slstm_step(c, g, p, cfg)
+    _, hs = jax.lax.scan(step, init, jnp.moveaxis(gx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(xin.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    return jnp.einsum("bsd,de->bse", y, p["w_out"],
+                      preferred_element_type=F32).astype(xin.dtype)
+
+
+def slstm_init_state(cfg, batch):
+    h = cfg.n_heads
+    hd = cfg.d_model // h
+    z = jnp.zeros((batch, h, hd), F32)
+    return {"h": z, "c": z, "n": z, "m": jnp.full((batch, h, hd), -1e30, F32)}
+
+
+def slstm_block_decode(xin, p, cfg, state):
+    b = xin.shape[0]
+    gx = jnp.einsum("bsd,dhg->bshg", xin, p["w_x"],
+                    preferred_element_type=F32)[:, 0]           # (B,H,4hd)
+    carry = (state["h"], state["c"], state["n"], state["m"])
+    (h_new, c_new, n_new, m_new), y = slstm_step(carry, gx, p, cfg)
+    d = cfg.d_model
+    y = y.reshape(b, 1, d).astype(xin.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", y, p["w_out"],
+                     preferred_element_type=F32).astype(xin.dtype)
+    return out, {"h": h_new, "c": c_new, "n": n_new, "m": m_new}

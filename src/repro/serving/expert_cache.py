@@ -1,0 +1,127 @@
+"""PFCS expert-weight cache for MoE serving (kimi-k2 / deepseek-v2).
+
+Experts are data elements; HBM holds a subset (hot experts), host memory
+the rest.  Each decode step's router output is a set of active experts;
+PFCS encodes *co-activation* — the top-k set of a token batch — as a
+composite over expert primes.  The registry accumulates the co-activation
+structure of the workload, and on activation of expert e the divisibility
+scan + factorization recovers exactly which experts historically co-fire
+with e; those are prefetched host->HBM ahead of the expert all-to-all.
+
+Zero false positives (Theorem 1) means no wasted host->HBM transfers on
+unrelated experts — the transfers are the scarce resource when cold
+experts live off-chip.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core.assignment import PrimeAssigner
+from repro.core.composite import CompositeRegistry
+from repro.core.factorization import Factorizer
+from repro.core.primes import CacheLevel, HierarchicalPrimeAllocator
+
+__all__ = ["ExpertCache", "ExpertCacheStats"]
+
+
+@dataclass
+class ExpertCacheStats:
+    hits: int = 0
+    misses: int = 0             # demand host->HBM transfer (stalls the step)
+    prefetches: int = 0
+    prefetch_hits: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(1, self.hits + self.misses)
+
+
+class ExpertCache:
+    def __init__(self, n_experts: int, hbm_slots: int,
+                 prefetch_budget: int = 4, max_group: int = 8):
+        self.n_experts = n_experts
+        self.hbm_slots = hbm_slots
+        self.prefetch_budget = prefetch_budget
+        self.max_group = max_group
+        self.factorizer = Factorizer()
+        self.registry = CompositeRegistry(self.factorizer)
+        self.assigner = PrimeAssigner(HierarchicalPrimeAllocator(),
+                                      self.registry)
+        for e in range(n_experts):
+            self.assigner.assign(e, CacheLevel.L2)
+        self.hbm: "OrderedDict[int, bool]" = OrderedDict()
+        self.stats = ExpertCacheStats()
+        self._seen_groups: Set[frozenset] = set()
+
+    # ------------------------------------------------------------------ #
+
+    def observe_routing(self, expert_sets: Iterable[Sequence[int]]) -> None:
+        """Feed router top-k sets (e.g. aux['router_top_idx'] rows).
+        Each new co-activation group is registered once as a composite."""
+        for s in expert_sets:
+            grp = frozenset(int(e) for e in s)
+            if len(grp) < 2 or grp in self._seen_groups:
+                continue
+            self._seen_groups.add(grp)
+            # cap group size so composites stay chunk-friendly
+            grp_l = sorted(grp)[: self.max_group]
+            primes = {self.assigner.prime_of(e) for e in grp_l}
+            primes.discard(None)
+            if len(primes) >= 2:
+                self.registry.register(primes, kind="coactivation")
+
+    def _evict(self) -> None:
+        while len(self.hbm) > self.hbm_slots:
+            self.hbm.popitem(last=False)
+            self.stats.evictions += 1
+
+    def _insert(self, e: int, prefetched: bool) -> None:
+        self.hbm[e] = prefetched
+        self.hbm.move_to_end(e)
+        self._evict()
+
+    def activate(self, experts: Sequence[int]) -> Dict[int, str]:
+        """A decode step needs these experts.  Returns per-expert tier.
+        Misses model a demand host->HBM weight transfer."""
+        tiers: Dict[int, str] = {}
+        for e in experts:
+            e = int(e)
+            if e in self.hbm:
+                was_pf = self.hbm[e]
+                self.hbm[e] = False
+                self.hbm.move_to_end(e)
+                self.stats.hits += 1
+                if was_pf:
+                    self.stats.prefetch_hits += 1
+                tiers[e] = "hbm"
+            else:
+                self.stats.misses += 1
+                self._insert(e, False)
+                tiers[e] = "host"
+        for e in experts:
+            self._prefetch_coactivated(int(e))
+        return tiers
+
+    def _prefetch_coactivated(self, e: int) -> None:
+        p = self.assigner.prime_of(e)
+        if p is None:
+            return
+        budget = self.prefetch_budget
+        for rel in self.registry.containing(p):
+            for q in rel.primes:
+                if q == p:
+                    continue
+                other = self.assigner.data_of(q)
+                if other is None or other in self.hbm:
+                    continue
+                self._insert(other, True)
+                self.stats.prefetches += 1
+                budget -= 1
+                if budget <= 0:
+                    return

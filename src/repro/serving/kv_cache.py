@@ -1,0 +1,199 @@
+"""Paged KV cache with PFCS page management (the paper's technique as a
+first-class serving feature).
+
+Pages are fixed-size KV blocks (``page_size`` tokens) living in a tiered
+store: HBM (hot, limited slots) and host memory (cold, large).  PFCS
+assigns each page a prime; a request's page *chain* is encoded as
+composites over consecutive page pairs, so
+
+  * shared prefixes between requests are discovered deterministically —
+    two chains sharing pages share primes, and ``gcd`` of their chain
+    composites recovers exactly the shared pages (zero false sharing,
+    Theorem 1);
+  * on access to page p, the divisibility scan over the chain registry
+    finds every chain through p; factorization yields the *successor*
+    pages other requests needed next — those are prefetched host->HBM
+    ahead of the decode step that will touch them.
+
+The device-side block-table attention consuming these pages is standard
+paged attention; here we manage placement.  Hit/miss/prefetch stats feed
+the serving benchmark (case_serving).
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core.assignment import PrimeAssigner
+from repro.core.composite import CompositeRegistry
+from repro.core.factorization import Factorizer
+from repro.core.primes import CacheLevel, HierarchicalPrimeAllocator
+
+__all__ = ["PagedKVCache", "PageStats"]
+
+
+@dataclass
+class PageStats:
+    hbm_hits: int = 0
+    host_hits: int = 0          # page had to be fetched host -> HBM on demand
+    misses: int = 0             # page did not exist (fresh allocation)
+    prefetches: int = 0
+    prefetch_hits: int = 0      # demanded while still resident from prefetch
+    evictions: int = 0
+    shared_prefix_pages: int = 0
+
+    @property
+    def hbm_hit_rate(self) -> float:
+        total = self.hbm_hits + self.host_hits + self.misses
+        return self.hbm_hits / max(1, total)
+
+
+class PagedKVCache:
+    """Host-side page manager.  Page ids are globally unique ints."""
+
+    def __init__(self, hbm_pages: int = 1024, page_size: int = 16,
+                 prefetch_budget: int = 4):
+        self.page_size = page_size
+        self.hbm_capacity = hbm_pages
+        self.prefetch_budget = prefetch_budget
+        self.factorizer = Factorizer()
+        self.registry = CompositeRegistry(self.factorizer)
+        self.assigner = PrimeAssigner(HierarchicalPrimeAllocator(),
+                                      self.registry)
+        self.hbm: "OrderedDict[int, bool]" = OrderedDict()  # page -> prefetched
+        self.host: Set[int] = set()
+        self.chains: Dict[int, List[int]] = {}              # request -> pages
+        self._content: Dict[int, int] = {}   # content hash -> page id (prefix share)
+        self._next_page = 0
+        self.stats = PageStats()
+
+    # ------------------------------------------------------------------ #
+    # page identity & prefix sharing                                      #
+    # ------------------------------------------------------------------ #
+
+    def _page_for_tokens(self, token_block: Tuple[int, ...]) -> Tuple[int, bool]:
+        """Content-addressed page id: identical prefixes share pages."""
+        h = hash(token_block)
+        if h in self._content:
+            self.stats.shared_prefix_pages += 1
+            return self._content[h], True
+        pid = self._next_page
+        self._next_page += 1
+        self._content[h] = pid
+        self.assigner.assign(pid, CacheLevel.L2)
+        return pid, False
+
+    def register_request(self, req_id: int, tokens: Sequence[int]) -> List[int]:
+        """Map a request's prompt onto pages; register chain relationships."""
+        pages: List[int] = []
+        blocks = [tuple(tokens[i:i + self.page_size])
+                  for i in range(0, len(tokens), self.page_size)]
+        prefix: Tuple[int, ...] = ()
+        for blk in blocks:
+            prefix = prefix + blk           # page identity includes prefix
+            pid, _ = self._page_for_tokens(prefix)
+            pages.append(pid)
+        self.chains[req_id] = pages
+        # chain relationships: consecutive page pairs (successor edges)
+        for a, b in zip(pages, pages[1:]):
+            pa, pb = self.assigner.prime_of(a), self.assigner.prime_of(b)
+            if pa is not None and pb is not None and pa != pb:
+                self.registry.register({pa, pb}, kind="chain")
+        return pages
+
+    # ------------------------------------------------------------------ #
+    # placement                                                            #
+    # ------------------------------------------------------------------ #
+
+    def _evict_to_host(self) -> None:
+        while len(self.hbm) > self.hbm_capacity:
+            pid, _ = self.hbm.popitem(last=False)
+            self.host.add(pid)
+            self.stats.evictions += 1
+
+    def _insert_hbm(self, pid: int, prefetched: bool) -> None:
+        self.host.discard(pid)
+        self.hbm[pid] = prefetched
+        self.hbm.move_to_end(pid)
+        self._evict_to_host()
+
+    def touch(self, req_id: int, page_idx: int) -> str:
+        """Demand access to a request's page (decode step reads it).
+        Returns the tier that served it ('hbm' | 'host' | 'new')."""
+        pages = self.chains[req_id]
+        pid = pages[page_idx]
+        if pid in self.hbm:
+            was_pf = self.hbm[pid]
+            self.hbm[pid] = False
+            self.hbm.move_to_end(pid)
+            self.stats.hbm_hits += 1
+            if was_pf:
+                self.stats.prefetch_hits += 1
+            tier = "hbm"
+        elif pid in self.host:
+            self.stats.host_hits += 1
+            self._insert_hbm(pid, False)
+            tier = "host"
+        else:
+            self.stats.misses += 1
+            self._insert_hbm(pid, False)
+            tier = "new"
+        self._prefetch_successors(pid)
+        return tier
+
+    def _prefetch_successors(self, pid: int) -> None:
+        """§4.2 scan: chains through pid -> prefetch successor pages."""
+        p = self.assigner.prime_of(pid)
+        if p is None:
+            return
+        budget = self.prefetch_budget
+        for rel in self.registry.containing(p):
+            for q in rel.primes:
+                if q == p:
+                    continue
+                succ = self.assigner.data_of(q)
+                if succ is None or succ in self.hbm:
+                    continue
+                self._insert_hbm(succ, True)
+                self.stats.prefetches += 1
+                budget -= 1
+                if budget <= 0:
+                    return
+
+    # ------------------------------------------------------------------ #
+    # deterministic shared-prefix discovery                                #
+    # ------------------------------------------------------------------ #
+
+    def shared_prefix(self, req_a: int, req_b: int) -> List[int]:
+        """Pages shared by two requests, recovered via gcd of the chain
+        composites (exact — unique factorization)."""
+        import math
+        ca = self._chain_composite(req_a)
+        cb = self._chain_composite(req_b)
+        g = math.gcd(ca, cb)
+        if g <= 1:
+            return []
+        shared_primes = self.factorizer.distinct_factors(g)
+        out = []
+        for q in shared_primes:
+            pid = self.assigner.data_of(q)
+            if pid is not None:
+                out.append(pid)
+        return sorted(out)
+
+    def _chain_composite(self, req_id: int) -> int:
+        """Product of the chain's page primes, capped to arbitrary
+        precision host int (device kernels use the chunked encoding)."""
+        c = 1
+        for pid in self.chains.get(req_id, []):
+            p = self.assigner.prime_of(pid)
+            if p:
+                c *= p
+        return c
+
+    def release_request(self, req_id: int) -> None:
+        self.chains.pop(req_id, None)

@@ -1,0 +1,286 @@
+"""Logical-axis sharding rules -> NamedSharding for every pytree leaf.
+
+MaxText-style logical partitioning without the flax dependency: each
+parameter / cache / optimizer-state leaf gets a PartitionSpec derived
+from its path + shape, with a divisibility fallback (a dim that does not
+divide the mesh axis is replicated, with an optional warning — e.g.
+gemma's single KV head, xlstm's 4 heads).
+
+Axis conventions
+----------------
+  mesh axes : ("pod", "data", "model")  (pod absent on single-pod)
+  batch     -> ("pod", "data")          (DP across pods and data axis)
+  heads/mlp/experts/vocab -> "model"    (TP / EP)
+  d_model / d_ff fsdp dim -> "data"     (weight sharding for >=10B archs,
+                                         gathered within a pod — never
+                                         across the pod axis: cross-pod
+                                         all-gathers of weights would ride
+                                         the slow inter-pod links every
+                                         layer)
+  long-context KV seq -> ("pod", "data") (sequence parallelism for
+                                          batch=1 500k decode)
+"""
+
+from __future__ import annotations
+
+import logging
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+log = logging.getLogger(__name__)
+
+
+def mesh_axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _div(dim: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return True
+    if isinstance(axes, str):
+        axes = (axes,)
+    total = int(np.prod([mesh_axis_size(mesh, a) for a in axes]))
+    return dim % total == 0
+
+
+def _maybe(dim: int, mesh: Mesh, axes):
+    """axes if divisible else None (replicate)."""
+    return axes if (axes and _div(dim, mesh, axes)) else None
+
+
+# --------------------------------------------------------------------------- #
+# parameter rules                                                             #
+# --------------------------------------------------------------------------- #
+
+_RULES = [
+    # (path regex, callable(shape, mesh, fsdp) -> PartitionSpec entries for
+    #  the *trailing* (non-stacked) dims). Leading stack dims get None.
+    # embeddings: (V, D) — vocab over model, embed over fsdp
+    (r"(embed.*table|unembed)$",
+     lambda s, m, f: (_maybe(s[-2], m, "model"), _maybe(s[-1], m, f))),
+    # attention projections
+    (r"attn.*wq$|self_attn.*wq$|cross_attn.*wq$",
+     lambda s, m, f: (_maybe(s[-3], m, f), _maybe(s[-2], m, "model"), None)),
+    (r"(attn|self_attn|cross_attn).*(wk|wv)$",
+     lambda s, m, f: (_maybe(s[-3], m, f),
+                      _maybe(s[-2], m, "model"),
+                      None if _div(s[-2], m, "model") else _maybe(s[-1], m, "model"))),
+    (r"(attn|self_attn|cross_attn).*wo$",
+     lambda s, m, f: (_maybe(s[-3], m, "model"), None, _maybe(s[-1], m, f))),
+    (r"(bq|bk|bv)$", lambda s, m, f: (_maybe(s[-2], m, "model"), None)),
+    # MLA
+    (r"attn.*wq_a$", lambda s, m, f: (_maybe(s[-2], m, f), None)),
+    (r"attn.*wq_b$", lambda s, m, f: (None, _maybe(s[-2], m, "model"), None)),
+    (r"attn.*wkv_a$", lambda s, m, f: (_maybe(s[-2], m, f), None)),
+    (r"attn.*(wk_b|wv_b)$",
+     lambda s, m, f: (None, _maybe(s[-2], m, "model"), None)),
+    # dense FFN
+    (r"(ffn|shared).*(w_gate|w_up)$",
+     lambda s, m, f: (_maybe(s[-2], m, f), _maybe(s[-1], m, "model"))),
+    (r"(ffn|shared).*w_down$",
+     lambda s, m, f: (_maybe(s[-2], m, "model"), _maybe(s[-1], m, f))),
+    # MoE experts: (E, d, ff) / (E, ff, d)
+    (r"moe.*(w_gate|w_up)$",
+     lambda s, m, f: (_maybe(s[-3], m, "model"), _maybe(s[-2], m, f), None)),
+    (r"moe.*w_down$",
+     lambda s, m, f: (_maybe(s[-3], m, "model"), None, _maybe(s[-1], m, f))),
+    (r"moe.*router$", lambda s, m, f: (None, _maybe(s[-1], m, "model"))),
+    # Mamba2
+    (r"mix.*in_proj$",
+     lambda s, m, f: (_maybe(s[-2], m, f), _maybe(s[-1], m, "model"))),
+    (r"mix.*out_proj$",
+     lambda s, m, f: (_maybe(s[-2], m, "model"), _maybe(s[-1], m, f))),
+    (r"mix.*conv_w$", lambda s, m, f: (None, _maybe(s[-1], m, "model"))),
+    (r"mix.*conv_b$", lambda s, m, f: (_maybe(s[-1], m, "model"),)),
+    (r"mix.*(A_log|D|dt_bias)$", lambda s, m, f: (_maybe(s[-1], m, "model"),)),
+    (r"mix.*norm.*scale$", lambda s, m, f: (_maybe(s[-1], m, "model"),)),
+    # xLSTM mLSTM
+    (r"cell.*w_up$",
+     lambda s, m, f: (_maybe(s[-2], m, f), _maybe(s[-1], m, "model"))),
+    (r"cell.*w_down$",
+     lambda s, m, f: (_maybe(s[-2], m, "model"), _maybe(s[-1], m, f))),
+    (r"cell.*conv_w$", lambda s, m, f: (None, _maybe(s[-1], m, "model"))),
+    (r"cell.*conv_b$", lambda s, m, f: (_maybe(s[-1], m, "model"),)),
+    (r"cell.*(wq|wk|wv)$",
+     lambda s, m, f: (_maybe(s[-3], m, "model"), None, None)),
+    (r"cell.*(w_igate|w_fgate)$",
+     lambda s, m, f: (_maybe(s[-2], m, "model"), None)),
+    (r"cell.*w_x$", lambda s, m, f: (_maybe(s[-3], m, f), None,
+                                     _maybe(s[-1], m, "model"))),
+    (r"cell.*w_r$", lambda s, m, f: (None, None, _maybe(s[-1], m, "model"))),
+    (r"cell.*w_out$", lambda s, m, f: (_maybe(s[-2], m, f),
+                                       _maybe(s[-1], m, "model"))),
+    # frontends
+    (r"(frontend_proj|vis_proj.*w1)$",
+     lambda s, m, f: (None, _maybe(s[-1], m, "model"))),
+    (r"vis_proj.*w2$", lambda s, m, f: (_maybe(s[-2], m, "model"), None)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_pspec(path: str, shape: Tuple[int, ...], mesh: Mesh,
+                fsdp: Optional[str]) -> P:
+    """PartitionSpec for one parameter leaf."""
+    for pat, fn in _RULES:
+        if re.search(pat, path):
+            trailing = fn(shape, mesh, fsdp)
+            n_lead = len(shape) - len(trailing)
+            if n_lead < 0:  # unstacked variant (e.g. zamba shared blocks)
+                trailing = trailing[-len(shape):]
+                n_lead = 0
+            return P(*([None] * n_lead), *trailing)
+    return P()  # replicate (norms, biases, scalars)
+
+
+def params_shardings(abstract_params, mesh: Mesh, cfg) -> Any:
+    fsdp = "data" if cfg.use_fsdp else None
+    dp_only = getattr(cfg, "dp_only", False)
+    if dp_only:
+        # Small-model mode (§Perf iteration 4b): REPLICATE weights (pure
+        # data parallelism) — per-layer TP collectives vanish entirely;
+        # only the end-of-step gradient all-reduce remains (amortized over
+        # the whole layer stack).  Optimizer state is ZeRO-1-sharded over
+        # data (see opt_state_shardings).  Iteration 4a (ZeRO-3 weight
+        # sharding over data) was tried first and REFUTED — the
+        # gather/reshard traffic exceeded the TP all-reduces it replaced
+        # (EXPERIMENTS.md §Perf cell 4).
+        fsdp = None
+
+    def leaf(path, x):
+        ps = param_pspec(_path_str(path), x.shape, mesh, fsdp)
+        if dp_only:
+            ps = P(*[(None if e == "model" else e) for e in ps])
+        return NamedSharding(mesh, ps)
+    return jax.tree_util.tree_map_with_path(leaf, abstract_params)
+
+
+# --------------------------------------------------------------------------- #
+# batch / cache / activations                                                 #
+# --------------------------------------------------------------------------- #
+
+def batch_shardings(abstract_batch, mesh: Mesh,
+                    all_axes: bool = False) -> Any:
+    """Batch sharded over (pod, data); with ``all_axes`` (dp_only mode)
+    over every mesh axis — pure data parallelism, one sample slice per
+    device, no idle axis doing redundant compute."""
+    ba = tuple(mesh.axis_names) if all_axes else batch_axes(mesh)
+    def leaf(x):
+        if x.ndim >= 1 and _div(x.shape[0], mesh, ba):
+            return NamedSharding(mesh, P(ba, *([None] * (x.ndim - 1))))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(leaf, abstract_batch)
+
+
+def cache_shardings(abstract_cache, mesh: Mesh, cfg,
+                    seq_shard: bool = False,
+                    seq_over_model: bool = False) -> Any:
+    """Decode-cache sharding.
+
+    Layout convention: (L, B, S, ...) for kv-like caches, (L, B, ...) for
+    recurrent states, plus scalar 'len'.  ``seq_shard=True`` (batch=1
+    long-context decode) shards S over the batch axes instead of B —
+    sequence parallelism for the 500k cells.
+
+    ``seq_over_model=True`` (§Perf optimized variant): when the KV-head
+    count does not divide the model axis, shard the cache *sequence* dim
+    over 'model' instead of head_dim — flash-decoding-style split-K.  The
+    hd->model layout makes GSPMD replicate the whole cache at the
+    attention einsum (observed: 2.7 GB all-gathers on kimi decode_32k);
+    S->model keeps the cache in place and reduces tiny partial outputs.
+    """
+    ba = batch_axes(mesh)
+    kv_like = ("k", "v", "xk", "xv", "latent", "rope")
+
+    def leaf(path, x):
+        path_s = _path_str(path)
+        if x.ndim <= 1:
+            return NamedSharding(mesh, P())
+        spec = [None] * x.ndim
+        # dim 0 is the layer stack; dim 1 batch; dim 2 seq (kv caches)
+        if x.ndim >= 3 and not seq_shard and _div(x.shape[1], mesh, ba):
+            spec[1] = ba
+        elif seq_shard and x.ndim >= 3 and path_s.split("/")[-1] in kv_like \
+                and _div(x.shape[2], mesh, ba):
+            spec[2] = ba
+        # last dims: shard heads over model; fall back to seq (opt) or hd
+        if x.ndim >= 4 and _div(x.shape[-2], mesh, "model"):
+            spec[-2] = "model"       # kv heads
+        elif (seq_over_model and x.ndim >= 4 and spec[2] is None
+                and path_s.split("/")[-1] in kv_like
+                and _div(x.shape[2], mesh, "model")):
+            spec[2] = "model"        # split-K decode
+        elif _div(x.shape[-1], mesh, "model"):
+            spec[-1] = "model"       # head_dim / latent / feature
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(leaf, abstract_cache)
+
+
+def opt_state_shardings(abstract_state, abstract_params, mesh: Mesh, cfg) -> Any:
+    """Optimizer-state sharding derived from the matching parameter spec.
+
+    AdamW m/v mirror the param shape -> same spec.  Adafactor vr drops the
+    last dim, vc drops the second-to-last -> spec with the matching entry
+    removed.  Scalars replicate.
+    """
+    fsdp = "data" if cfg.use_fsdp else None
+    param_specs: Dict[str, P] = {}
+
+    def record(path, x):
+        param_specs[_path_str(path)] = param_pspec(_path_str(path), x.shape,
+                                                   mesh, fsdp)
+        return x
+
+    jax.tree_util.tree_map_with_path(record, abstract_params)
+
+    dp_only = getattr(cfg, "dp_only", False)
+
+    def leaf(path, x):
+        ps = _path_str(path)
+        if x.ndim == 0:
+            return NamedSharding(mesh, P())
+        if dp_only:
+            # ZeRO-1: shard moments over data on the largest divisible dim
+            for d in range(x.ndim):
+                if _div(x.shape[d], mesh, "data"):
+                    spec = [None] * x.ndim
+                    spec[d] = "data"
+                    return NamedSharding(mesh, P(*spec))
+            return NamedSharding(mesh, P())
+        # strip optimizer wrappers to find the param path suffix
+        core = re.sub(r"^(m|v|mom|s)/", "", ps)
+        core = re.sub(r"/(vr|vc|v)$", "", core)
+        spec = param_specs.get(core)
+        if spec is None:
+            return NamedSharding(mesh, P())
+        entries = list(spec)
+        if ps.endswith("/vr") and len(entries) >= 1:      # param minus last dim
+            entries = entries[:-1]
+        elif ps.endswith("/vc") and len(entries) >= 2:    # minus 2nd-to-last
+            entries = entries[:-2] + entries[-1:]
+        return NamedSharding(mesh, P(*entries[: x.ndim]))
+
+    return jax.tree_util.tree_map_with_path(leaf, abstract_state)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,71 @@
+"""Error-feedback int8 gradient compression for the data-parallel axis.
+
+At 1000+ nodes the DP all-reduce of bf16 gradients dominates the step for
+small-per-chip-batch regimes.  This module implements 1-bit-Adam-style
+error-feedback quantization adapted to int8:
+
+    q = round(clip(g / scale)) with per-tensor scale = max|g| / 127
+    residual' = g - q * scale           (carried to the next step)
+
+The quantize/dequantize pair wraps the gradient *before* the pmean-style
+all-reduce; error feedback keeps the optimizer trajectory unbiased in the
+long run (Karimireddy et al., 2019).  4x wire-size reduction on the
+inter-pod links, which are the slowest hop in the 2x16x16 mesh.
+
+All functions are jit-safe pure pytree transforms; ``train_step`` opts in
+via ``compress_dp_grads=True`` in the trainer config.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def init_residuals(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+
+
+def quantize(g: jnp.ndarray, residual: jnp.ndarray
+             ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (int8 q, f32 scale scalar, new residual)."""
+    gf = g.astype(F32) + residual
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    new_residual = gf - q.astype(F32) * scale
+    return q, scale, new_residual
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(F32) * scale
+
+
+def compress_tree(grads: Any, residuals: Any) -> Tuple[Any, Any]:
+    """Quantize every leaf; returns ((q, scale) tree, residual tree)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    qs, new_r = [], []
+    for g, r in zip(flat_g, flat_r):
+        q, s, nr = quantize(g, r)
+        qs.append((q, s))
+        new_r.append(nr)
+    return treedef.unflatten(qs), treedef.unflatten(new_r)
+
+
+def decompress_tree(qtree: Any) -> Any:
+    return jax.tree.map(lambda qs: dequantize(*qs), qtree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def roundtrip_error(grads: Any, residuals: Any) -> float:
+    """Diagnostic: relative L2 error of one compress/decompress pass."""
+    qt, _ = compress_tree(grads, residuals)
+    back = decompress_tree(qt)
+    num = sum(jnp.sum((a.astype(F32) - b) ** 2)
+              for a, b in zip(jax.tree.leaves(grads), jax.tree.leaves(back)))
+    den = sum(jnp.sum(a.astype(F32) ** 2) for a in jax.tree.leaves(grads))
+    return float(jnp.sqrt(num / jnp.maximum(den, 1e-30)))

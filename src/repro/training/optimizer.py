@@ -1,0 +1,183 @@
+"""Optimizers: AdamW, Adafactor (factored second moment), SGD-momentum.
+
+Self-contained (no optax dependency).  Each optimizer is a pair of pure
+functions ``(init, update)`` over parameter pytrees; state layouts are
+chosen for sharding friendliness:
+
+  * AdamW     — m, v in f32 with the same shape (and thus the same
+    sharding spec) as the parameter; count scalar.
+  * Adafactor — factored v_row/v_col for rank>=2 tensors (the only viable
+    choice for the 1T-param MoE archs: full AdamW moments would need ~8 TB),
+    full v for vectors; optional momentum off by default.
+  * SGDM      — single momentum buffer.
+
+``cosine_schedule`` and global-norm clipping included.  ``GradState``
+bundles everything ``train_step`` carries between steps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+Params = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Params], Any]
+    update: Callable[[Params, Params, Any, jnp.ndarray], Tuple[Params, Any]]
+    # update(grads, params, state, lr) -> (new_params, new_state)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int
+                    ) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def lr(step):
+        step = step.astype(F32)
+        warm = base_lr * step / max(1, warmup)
+        prog = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(F32) ** 2) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(F32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+# --------------------------------------------------------------------------- #
+# AdamW                                                                       #
+# --------------------------------------------------------------------------- #
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, F32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, params, state, lr):
+        count = state["count"] + 1
+        c = count.astype(F32)
+        bc1 = 1.0 - b1 ** c
+        bc2 = 1.0 - b2 ** c
+
+        def upd(g, p, m, v):
+            g = g.astype(F32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            step = step + weight_decay * p.astype(F32)
+            return (p.astype(F32) - lr * step).astype(p.dtype), m, v
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_p = treedef.flatten_up_to(params)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd(g, p, m, v) for g, p, m, v in
+               zip(flat_g, flat_p, flat_m, flat_v)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "count": count}
+
+    return Optimizer(init, update)
+
+
+# --------------------------------------------------------------------------- #
+# Adafactor (Shazeer & Stern 2018), factored second moment                    #
+# --------------------------------------------------------------------------- #
+
+def adafactor(eps: float = 1e-30, clip_threshold: float = 1.0,
+              decay_exp: float = 0.8, weight_decay: float = 0.0) -> Optimizer:
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def st(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], F32),     # row: all but last
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], F32)}
+            return {"v": jnp.zeros(p.shape, F32)}
+        return {"s": jax.tree.map(st, params,
+                                  is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, params, state, lr):
+        count = state["count"] + 1
+        c = count.astype(F32)
+        beta2 = 1.0 - c ** (-decay_exp)
+
+        def upd(g, p, s):
+            g = g.astype(F32)
+            g2 = g * g + eps
+            if _factored(p.shape):
+                vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                vhat = (vr[..., None] / denom[..., None]) * vc[..., None, :]
+                u = g / jnp.sqrt(vhat + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = g / jnp.sqrt(v + eps)
+                new_s = {"v": v}
+            # update clipping (RMS)
+            rms_u = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            step = u + weight_decay * p.astype(F32)
+            return (p.astype(F32) - lr * step).astype(p.dtype), new_s
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_p = treedef.flatten_up_to(params)
+        flat_s = treedef.flatten_up_to(state["s"])
+        out = [upd(g, p, s) for g, p, s in zip(flat_g, flat_p, flat_s)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_s = treedef.unflatten([o[1] for o in out])
+        return new_p, {"s": new_s, "count": count}
+
+    return Optimizer(init, update)
+
+
+# --------------------------------------------------------------------------- #
+# SGD + momentum                                                              #
+# --------------------------------------------------------------------------- #
+
+def sgdm(momentum: float = 0.9, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"mom": jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, params, state, lr):
+        def upd(g, p, m):
+            g = g.astype(F32) + weight_decay * p.astype(F32)
+            m = momentum * m + g
+            return (p.astype(F32) - lr * m).astype(p.dtype), m
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_p = treedef.flatten_up_to(params)
+        flat_m = treedef.flatten_up_to(state["mom"])
+        out = [upd(g, p, m) for g, p, m in zip(flat_g, flat_p, flat_m)]
+        return (treedef.unflatten([o[0] for o in out]),
+                {"mom": treedef.unflatten([o[1] for o in out]),
+                 "count": state["count"] + 1})
+
+    return Optimizer(init, update)
+
+
+OPTIMIZERS = {"adamw": adamw, "adafactor": adafactor, "sgdm": sgdm}
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    return OPTIMIZERS[name](**kw)

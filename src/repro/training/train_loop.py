@@ -1,0 +1,121 @@
+"""Train-step factory: loss, backward, clip, optimizer, microbatching.
+
+``make_train_step(model, cfg)`` returns a pure
+``train_step(state, batch) -> (state, metrics)`` suitable for jit /
+``.lower()`` on any mesh.  TrainState bundles params + optimizer state +
+step counter.
+
+Cross-entropy is computed in f32 with next-token targets from the model's
+aux (``targets`` / ``loss_mask`` — the VLM masks image positions, enc-dec
+targets are decoder tokens).
+
+Microbatch gradient accumulation (``accum_steps > 1``) scans over batch
+slices — memory for activations drops by the accumulation factor while
+the optimizer sees the full-batch gradient (needed to fit train_4k at
+global_batch=256 on 16 GB chips for the bigger archs).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_zoo import Model
+
+from .optimizer import (Optimizer, clip_by_global_norm, cosine_schedule,
+                        make_optimizer)
+
+F32 = jnp.float32
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+
+
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray,
+                  mask: jnp.ndarray) -> jnp.ndarray:
+    """Next-token CE.  logits (B,S,V) f32; targets/mask (B,S)."""
+    lg = logits[:, :-1, :]
+    tg = targets[:, 1:]
+    mk = mask[:, 1:] & mask[:, :-1]
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, tg[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mk
+    return nll.sum() / jnp.maximum(mk.sum(), 1)
+
+
+def make_loss_fn(model: Model):
+    def loss_fn(params, batch):
+        logits, aux = model.train_logits(params, batch)
+        ce = cross_entropy(logits, aux["targets"], aux["loss_mask"])
+        total = ce + aux.get("aux_loss", 0.0)
+        return total, {"ce": ce, "aux": aux.get("aux_loss", 0.0)}
+    return loss_fn
+
+
+def make_train_step(model: Model,
+                    optimizer: Optional[Optimizer] = None,
+                    lr: float = 3e-4,
+                    warmup: int = 100,
+                    total_steps: int = 10_000,
+                    max_grad_norm: float = 1.0,
+                    accum_steps: int = 1) -> Callable:
+    cfg = model.cfg
+    opt = optimizer if optimizer is not None else make_optimizer(cfg.optimizer)
+    lr_fn = cosine_schedule(lr, warmup, total_steps)
+    loss_fn = make_loss_fn(model)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        if accum_steps == 1:
+            (loss, parts), grads = grad_fn(state.params, batch)
+        else:
+            def micro(carry, mb):
+                g_acc, l_acc, a_acc = carry
+                (l, parts), g = grad_fn(state.params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(F32), g_acc, g)
+                return (g_acc, l_acc + l, a_acc + parts["aux"]), None
+
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(accum_steps, b // accum_steps, *x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), state.params)
+            (grads, loss, aux_l), _ = jax.lax.scan(
+                micro, (g0, jnp.zeros((), F32), jnp.zeros((), F32)), mbs)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss / accum_steps
+            parts = {"ce": loss, "aux": aux_l / accum_steps}
+
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        new_params, new_opt = opt.update(grads, state.params, state.opt_state,
+                                         lr_fn(state.step))
+        metrics = {"loss": loss, "ce": parts["ce"], "aux_loss": parts["aux"],
+                   "grad_norm": gnorm, "lr": lr_fn(state.step)}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step
+
+
+def init_train_state(model: Model, rng,
+                     optimizer: Optional[Optimizer] = None) -> TrainState:
+    opt = optimizer if optimizer is not None else make_optimizer(
+        model.cfg.optimizer)
+    params = model.init_params(rng)
+    return TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
+
+
+def abstract_train_state(model: Model,
+                         optimizer: Optional[Optimizer] = None) -> TrainState:
+    """Shape-only TrainState (dry-run: no allocation)."""
+    opt = optimizer if optimizer is not None else make_optimizer(
+        model.cfg.optimizer)
+    params = model.param_specs()
+    opt_state = jax.eval_shape(opt.init, params)
+    return TrainState(params, opt_state,
+                      jax.ShapeDtypeStruct((), jnp.int32))

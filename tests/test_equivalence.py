@@ -1,0 +1,104 @@
+"""Numerical equivalences that pin the optimized paths to naive math:
+chunked attention == full, SSD chunked scan == recurrence, mLSTM
+parallel == chunked == recurrent, MLA decode == MLA train."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (attention_chunked, attention_full,
+                                    decode_attention)
+from repro.models.ssm import ssd_chunked, ssd_recurrent_step
+from repro.models.xlstm import (mlstm_chunked, mlstm_parallel,
+                                mlstm_recurrent_step)
+
+
+def test_chunked_attention_matches_full():
+    rng = np.random.default_rng(0)
+    B, S, H, KV, D = 2, 128, 8, 2, 16
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
+    full = attention_full(q, k, v, causal=True)
+    for chunk in (16, 32, 64):
+        ch = attention_chunked(q, k, v, chunk=chunk, causal=True)
+        np.testing.assert_allclose(np.asarray(ch), np.asarray(full),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_decode_attention_matches_full_last_row():
+    rng = np.random.default_rng(1)
+    B, S, H, KV, D = 2, 32, 4, 4, 8
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
+    full = attention_full(q, k, v, causal=True)
+    dec = decode_attention(q[:, -1:], k, v,
+                           jnp.full((B,), S, jnp.int32))
+    np.testing.assert_allclose(np.asarray(dec[:, 0]),
+                               np.asarray(full[:, -1]), rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(min_value=1, max_value=3),
+       st.sampled_from([8, 16, 32]))
+@settings(max_examples=10, deadline=None)
+def test_ssd_chunked_equals_recurrence(seed, chunk):
+    rng = np.random.default_rng(seed)
+    B, S, H, P, G, N = 1, 64, 2, 4, 1, 8
+    x = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.05, 0.8, size=(B, S, H)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.3, 2.0, size=(H,)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B, S, G, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(B, S, G, N)), jnp.float32)
+    y = ssd_chunked(x, dt, A, Bm, Cm, chunk)
+    state = jnp.zeros((B, H, N, P))
+    outs = []
+    for t in range(S):
+        o, state = ssd_recurrent_step(state, x[:, t], dt[:, t], A,
+                                      Bm[:, t], Cm[:, t])
+        outs.append(o)
+    ref = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mlstm_three_way_equivalence():
+    rng = np.random.default_rng(4)
+    B, S, H, D = 2, 48, 2, 8
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    ig = jnp.asarray(rng.normal(size=(B, S, H)), jnp.float32)
+    fg = jnp.asarray(rng.normal(size=(B, S, H)) + 2.0, jnp.float32)
+    par = mlstm_parallel(q, k, v, ig, fg)
+    chk = mlstm_chunked(q, k, v, ig, fg, 16)
+    state = {"C": jnp.zeros((B, H, D, D)), "n": jnp.zeros((B, H, D)),
+             "m": jnp.full((B, H), -1e30)}
+    outs = []
+    for t in range(S):
+        o, state = mlstm_recurrent_step(state, q[:, t], k[:, t], v[:, t],
+                                        ig[:, t], fg[:, t])
+        outs.append(o)
+    rec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(chk), np.asarray(par),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(par), np.asarray(rec),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_gqa_grouping_matches_repeated_kv():
+    """GQA einsum grouping == explicit KV repetition."""
+    rng = np.random.default_rng(5)
+    B, S, H, KV, D = 1, 16, 8, 2, 8
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
+    out = attention_full(q, k, v, causal=True)
+    k_rep = jnp.repeat(k, H // KV, axis=2)
+    v_rep = jnp.repeat(v, H // KV, axis=2)
+    ref = attention_full(q, k_rep, v_rep, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,101 @@
+"""End-to-end integration: training convergence, resume determinism,
+hybrid prefill/decode consistency, engine batching invariants."""
+
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.data.pipeline import ShardedLoader, SyntheticCorpus
+from repro.models import build_model
+from repro.training.checkpoint import CheckpointManager
+from repro.training.train_loop import (TrainState, init_train_state,
+                                       make_train_step)
+
+
+def test_training_reduces_loss():
+    """A few hundred steps on the synthetic corpus must reduce CE."""
+    cfg = get_smoke("qwen2.5-3b").replace(vocab_size=259)
+    model = build_model(cfg)
+    corpus = SyntheticCorpus(vocab_size=259)
+    loader = ShardedLoader(corpus, global_batch=8, seq_len=64)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, lr=1e-3, warmup=10,
+                                   total_steps=150), donate_argnums=(0,))
+    losses = []
+    for i in range(150):
+        batch = {k: jnp.asarray(v) for k, v in loader.batch_at(i).items()}
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    first = np.mean(losses[:10])
+    last = np.mean(losses[-10:])
+    assert last < first - 0.05, (first, last)
+
+
+def test_checkpoint_resume_bit_identical(tmp_path):
+    """Restart from a checkpoint reproduces the exact same next step
+    (deterministic loader keyed on step + atomic checkpoint)."""
+    cfg = get_smoke("gemma-2b").replace(vocab_size=259)
+    model = build_model(cfg)
+    corpus = SyntheticCorpus(vocab_size=259)
+    loader = ShardedLoader(corpus, global_batch=4, seq_len=32)
+    step = jax.jit(make_train_step(model, lr=1e-3, warmup=0, total_steps=50))
+    mgr = CheckpointManager(tmp_path)
+
+    state = init_train_state(model, jax.random.PRNGKey(1))
+    for i in range(5):
+        batch = {k: jnp.asarray(v) for k, v in loader.batch_at(i).items()}
+        state, _ = step(state, batch)
+    mgr.save(5, state)
+    batch6 = {k: jnp.asarray(v) for k, v in loader.batch_at(5).items()}
+    cont, m_cont = step(state, batch6)
+
+    restored = mgr.restore(state, step=5)
+    resumed, m_res = step(TrainState(*restored), batch6)
+    assert float(m_cont["loss"]) == float(m_res["loss"])
+    for a, b in zip(jax.tree.leaves(cont.params), jax.tree.leaves(resumed.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_zamba_decode_consistency():
+    """Hybrid arch: feeding tokens one-by-one through decode reproduces
+    the parallel train forward's final logits (SSD recurrence + shared
+    attention KV both exercised)."""
+    cfg = get_smoke("zamba2-7b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(2))
+    B, S = 1, 32
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, size=(B, S)).astype(np.int32)
+    full, _ = jax.jit(model.train_logits)(params, {"tokens": jnp.asarray(toks)})
+    cache = model.init_cache(B, S + 2)
+    dec = jax.jit(model.decode_step)
+    logits = None
+    for t in range(S):
+        logits, cache = dec(params, {"tokens": jnp.asarray(toks[:, t:t + 1])},
+                            cache)
+    np.testing.assert_allclose(np.asarray(full[:, -1], np.float32),
+                               np.asarray(logits[:, 0], np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_engine_requests_isolated():
+    """Continuous batching: concurrent requests with different prompts get
+    different generations (no cross-slot cache bleed)."""
+    from repro.serving.engine import ServingEngine
+
+    cfg = get_smoke("gemma-2b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(3))
+    eng = ServingEngine(model, params, max_batch=2, max_seq=64, page_size=8)
+    rng = np.random.default_rng(1)
+    a = eng.submit(list(rng.integers(0, 500, size=12)), max_new_tokens=6)
+    b = eng.submit(list(rng.integers(0, 500, size=12)), max_new_tokens=6)
+    done = eng.run_until_idle()
+    gens = {r.req_id: tuple(r.generated) for r in done}
+    assert len(done) == 2
+    assert gens[a] != gens[b]

@@ -1,0 +1,115 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, exact equality
+(integer kernels — no tolerance)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.factorize import (divisibility_mask_pallas,
+                                     factorize_squarefree_pallas)
+from repro.kernels.gcd import gcd_pallas
+from repro.kernels.ops import divisibility_scan, factorize_batch, gcd_batch
+from repro.kernels.ref import (divisibility_mask_ref,
+                               factorize_squarefree_ref, gcd_ref)
+
+PRIMES_SMALL = np.array(
+    [2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47, 53, 59, 61,
+     67, 71, 73, 79, 83, 89, 97, 101, 103, 107, 109, 113], dtype=np.int64)
+
+
+def _pad(x, mult, fill):
+    pad = (-len(x)) % mult
+    return np.concatenate([x, np.full(pad, fill, x.dtype)])
+
+
+@pytest.mark.parametrize("n,p,bn,bp", [
+    (256, 512, 256, 512),
+    (512, 512, 256, 512),
+    (256, 1024, 128, 256),
+    (1024, 512, 512, 128),
+])
+@pytest.mark.parametrize("dtype", [np.int32, np.int64])
+def test_factorize_kernel_matches_ref(n, p, bn, bp, dtype):
+    rng = np.random.default_rng(n + p)
+    pool = _pad(PRIMES_SMALL.astype(dtype), bp, 0)[:p]
+    pairs = rng.choice(PRIMES_SMALL, size=(n, 2), replace=True)
+    comps = (pairs[:, 0] * pairs[:, 1]).astype(dtype)
+    ctx = jax.enable_x64(True) if dtype == np.int64 else _null()
+    with ctx:
+        cj, pj = jnp.asarray(comps), jnp.asarray(pool)
+        mask, res = factorize_squarefree_pallas(cj, pj, block_n=bn, block_p=bp)
+        mref, rref = factorize_squarefree_ref(cj, pj)
+        assert (np.asarray(mask) == np.asarray(mref)).all()
+        assert (np.asarray(res) == np.asarray(rref)).all()
+
+
+@pytest.mark.parametrize("dtype", [np.int32, np.int64])
+def test_divmask_kernel_matches_ref(dtype):
+    rng = np.random.default_rng(0)
+    comps = _pad((rng.choice(PRIMES_SMALL, size=(300, 2)).prod(axis=1)
+                  ).astype(dtype), 256, 1)
+    qs = _pad(PRIMES_SMALL.astype(dtype), 512, 0)
+    ctx = jax.enable_x64(True) if dtype == np.int64 else _null()
+    with ctx:
+        cj, qj = jnp.asarray(comps), jnp.asarray(qs)
+        mask = divisibility_mask_pallas(cj, qj)
+        mref = divisibility_mask_ref(cj, qj)
+        assert (np.asarray(mask) == np.asarray(mref)).all()
+
+
+@pytest.mark.parametrize("n", [1024, 2048, 4096])
+@pytest.mark.parametrize("dtype", [np.int32, np.int64])
+def test_gcd_kernel_matches_ref(n, dtype):
+    rng = np.random.default_rng(n)
+    hi = 2**28 if dtype == np.int32 else 2**40
+    a = rng.integers(1, hi, size=n).astype(dtype)
+    b = rng.integers(1, hi, size=n).astype(dtype)
+    ctx = jax.enable_x64(True) if dtype == np.int64 else _null()
+    with ctx:
+        g = gcd_pallas(jnp.asarray(a), jnp.asarray(b))
+        assert (np.asarray(g) == np.gcd(a, b)).all()
+
+
+def test_gcd_zero_edge():
+    a = np.array([0, 5, 0, 12] + [1] * 124, dtype=np.int32)
+    b = np.array([7, 0, 0, 18] + [1] * 124, dtype=np.int32)
+    a, b = _pad(a, 1024, 1), _pad(b, 1024, 1)
+    g = gcd_pallas(jnp.asarray(a), jnp.asarray(b))
+    assert (np.asarray(g) == np.gcd(a, b)).all()
+
+
+# --------------------------------------------------------------------------- #
+# host wrappers (padding, dtype pick, compaction)                              #
+# --------------------------------------------------------------------------- #
+
+def test_factorize_batch_ragged():
+    facs, resid = factorize_batch([6, 35, 143, 101], [2, 3, 5, 7, 11, 13])
+    assert facs == [[2, 3], [5, 7], [11, 13], []]
+    assert list(resid) == [1, 1, 1, 101]
+
+
+def test_factorize_batch_int64_path():
+    big = 1_000_003 * 1_000_033
+    facs, resid = factorize_batch([big], [1_000_003, 1_000_033])
+    assert facs[0] == [1_000_003, 1_000_033] and resid[0] == 1
+
+
+def test_divisibility_scan_compaction():
+    idx = divisibility_scan([6, 10, 15, 21], [2, 3, 5, 7])
+    assert [list(i) for i in idx] == [[0, 1], [0, 2, 3], [1, 2], [3]]
+
+
+def test_scan_empty_inputs():
+    out = divisibility_scan([], [3])
+    assert len(out) == 1 and len(out[0]) == 0
+    assert gcd_batch([], []).size == 0
+
+
+class _null:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False

@@ -1,0 +1,178 @@
+"""PFCS core: primes, factorization, composites — incl. the paper's
+Theorem 1 (zero false positives) as a machine-checked property."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CacheLevel, CompositeRegistry, Factorizer,
+                        HierarchicalPrimeAllocator, PrimeAssigner,
+                        encode_relationship, is_prime, segmented_sieve,
+                        sieve_primes, spf_table)
+
+
+# --------------------------------------------------------------------------- #
+# primes                                                                      #
+# --------------------------------------------------------------------------- #
+
+def test_sieve_small():
+    assert list(sieve_primes(30)) == [2, 3, 5, 7, 11, 13, 17, 19, 23, 29]
+
+
+def test_sieve_counts():
+    assert len(sieve_primes(1_000)) == 168
+    assert len(sieve_primes(100_000)) == 9592
+
+
+def test_spf_table_recovers_factorization():
+    spf = spf_table(10_000)
+    for n in [2, 4, 60, 97, 9991, 9999]:
+        out = []
+        m = n
+        while m > 1:
+            p = int(spf[m])
+            out.append(p)
+            m //= p
+        prod = 1
+        for p in out:
+            prod *= p
+        assert prod == n
+        assert all(is_prime(p) for p in out)
+
+
+def test_segmented_sieve_matches_full():
+    full = sieve_primes(5_000)
+    seg = segmented_sieve(1_000, 5_001)
+    assert list(seg) == [int(p) for p in full if p >= 1_000]
+
+
+@given(st.integers(min_value=2, max_value=10**6))
+@settings(max_examples=200, deadline=None)
+def test_is_prime_agrees_with_trial_division(n):
+    ref = all(n % d for d in range(2, int(n**0.5) + 1))
+    assert is_prime(n) == ref
+
+
+def test_pool_allocation_ascending_and_recycle():
+    alloc = HierarchicalPrimeAllocator()
+    pool = alloc.pool(CacheLevel.L1)
+    ps = [pool.allocate() for _ in range(10)]
+    assert ps == sorted(ps) and ps[0] == 2
+    pool.free(ps[3])
+    assert pool.allocate() == ps[3]  # freed primes are reused first
+
+
+def test_l1_pool_exhausts_at_168():
+    alloc = HierarchicalPrimeAllocator()
+    pool = alloc.pool(CacheLevel.L1)
+    got = [pool.allocate() for _ in range(168)]
+    assert all(p is not None for p in got)
+    assert pool.allocate() is None  # bounded pool is dry
+
+
+def test_mem_pool_is_unbounded():
+    alloc = HierarchicalPrimeAllocator()
+    pool = alloc.pool(CacheLevel.MEM)
+    ps = [pool.allocate() for _ in range(5000)]
+    assert all(p >= 1_000_003 for p in ps)
+    assert len(set(ps)) == 5000
+
+
+# --------------------------------------------------------------------------- #
+# factorization (Algorithm 2)                                                 #
+# --------------------------------------------------------------------------- #
+
+def test_factorize_stages():
+    f = Factorizer()
+    assert f.factorize(143) == (11, 13)            # SPF table
+    assert f.stats.table_hits == 1
+    big = 1_000_003 * 1_000_033                    # Pollard rho territory
+    assert f.factorize(big) == (1_000_003, 1_000_033)
+    assert f.factorize(big) == (1_000_003, 1_000_033)  # cache hit
+    assert f.stats.cache_hits >= 1
+
+
+def test_factorize_with_multiplicity():
+    f = Factorizer()
+    assert f.factorize(8) == (2, 2, 2)
+    assert f.factorize(2**3 * 3**2 * 97) == (2, 2, 2, 3, 3, 97)
+
+
+@given(st.lists(st.sampled_from([2, 3, 5, 7, 11, 13, 1009, 99991,
+                                 100_003, 999_983]),
+                min_size=1, max_size=4, unique=True))
+@settings(max_examples=100, deadline=None)
+def test_factorize_roundtrip(primes):
+    f = Factorizer()
+    c = 1
+    for p in primes:
+        c *= p
+    assert f.distinct_factors(c) == tuple(sorted(primes))
+
+
+# --------------------------------------------------------------------------- #
+# composites — Theorem 1                                                      #
+# --------------------------------------------------------------------------- #
+
+@given(st.sets(st.sampled_from(list(range(3, 600, 2))), min_size=2, max_size=8))
+@settings(max_examples=150, deadline=None)
+def test_zero_false_positives(odd_ids):
+    """Theorem 1: decoding a relationship's composites recovers exactly the
+    registered primes — never a superset, never a subset."""
+    primes = sieve_primes(10_000)
+    reg = CompositeRegistry()
+    chosen = frozenset(int(primes[i]) for i in odd_ids)
+    if len(chosen) < 2:
+        return
+    rel = reg.register(chosen)
+    recovered = set()
+    for c in rel.composites:
+        recovered |= set(reg.decode(c))
+    assert recovered == set(chosen)
+
+
+def test_divisibility_scan_exact():
+    reg = CompositeRegistry()
+    r1 = reg.register({11, 13})
+    r2 = reg.register({13, 17})
+    r3 = reg.register({19, 23})
+    hits = reg.containing(13)
+    assert {r.rel_id for r in hits} == {r1.rel_id, r2.rel_id}
+    assert reg.related_primes(13) == {11, 17}
+    assert reg.related_primes(19) == {23}
+
+
+def test_encode_relationship_chunks_overflow():
+    big_primes = [1_000_003, 1_000_033, 1_000_037, 1_000_039,
+                  1_000_081, 1_000_099, 1_000_117, 1_000_121]
+    chunks = encode_relationship(big_primes, max_bits=62)
+    assert len(chunks) > 1
+    prod = 1
+    for c in chunks:
+        assert c < 2**62
+        prod *= c
+    expect = 1
+    for p in big_primes:
+        expect *= p
+    assert prod == expect
+
+
+def test_drop_prime_purges_relationships():
+    reg = CompositeRegistry()
+    reg.register({11, 13})
+    reg.register({11, 17})
+    reg.register({19, 23})
+    reg.drop_prime(11)
+    assert len(reg) == 1
+    assert reg.related_primes(13) == set()
+
+
+def test_assigner_recycling_under_exhaustion():
+    assigner = PrimeAssigner()
+    # force many hot assignments into tiny L1 (168 primes)
+    for i in range(200):
+        assigner.tracker.record(i)
+        assigner.tracker._freq[i] = 0.9  # hot -> L1-range selection
+        p = assigner.assign(i, CacheLevel.L1)
+        assert p is not None
+    assert assigner.stats.recycle_events >= 1

@@ -1,0 +1,139 @@
+"""Replacement policies + simulator: capacity invariants (hypothesis),
+LRU exactness vs brute force, Table-1-style system ordering."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DEFAULT_LEVELS, db_join_trace, derive_table1_row,
+                        fast_lru_hit_rate, graph_walk_trace, make_policy,
+                        run_all_systems, simulate_baseline, simulate_pfcs,
+                        simulate_semantic, zipf_trace)
+from repro.core.policies import POLICY_FACTORIES
+
+
+@given(st.sampled_from(sorted(POLICY_FACTORIES)),
+       st.integers(min_value=1, max_value=40),
+       st.lists(st.integers(min_value=0, max_value=60), min_size=1,
+                max_size=300))
+@settings(max_examples=80, deadline=None)
+def test_policy_capacity_invariant(name, cap, keys):
+    pol = make_policy(name, cap)
+    for k in keys:
+        hit = pol.access(k)
+        assert isinstance(hit, bool)
+        assert len(pol) <= cap
+        assert pol.contains(k)  # just-accessed key must be resident
+
+
+def _brute_lru(keys, cap):
+    cache, hits = [], 0
+    for k in keys:
+        if k in cache:
+            hits += 1
+            cache.remove(k)
+        cache.append(k)
+        if len(cache) > cap:
+            cache.pop(0)
+    return hits
+
+
+@given(st.integers(min_value=1, max_value=20),
+       st.lists(st.integers(min_value=0, max_value=30), min_size=1,
+                max_size=200))
+@settings(max_examples=60, deadline=None)
+def test_lru_matches_bruteforce(cap, keys):
+    pol = make_policy("lru", cap)
+    hits = sum(pol.access(k) for k in keys)
+    assert hits == _brute_lru(keys, cap)
+
+
+def test_fast_lru_matches_python():
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 200, size=2000).astype(np.int64)
+    for cap in (8, 32, 128):
+        py = _brute_lru(list(keys), cap) / len(keys)
+        jx = fast_lru_hit_rate(keys, cap)
+        assert abs(py - jx) < 1e-9, (cap, py, jx)
+
+
+def test_arc_adapts_better_than_fifo_on_mixed():
+    """ARC should beat FIFO on a mixed recency+frequency workload."""
+    rng = np.random.default_rng(1)
+    hot = rng.integers(0, 50, size=4000)         # frequent set
+    scan = np.arange(50, 2050)                   # one long scan
+    keys = np.concatenate([hot[:2000], scan, hot[2000:]])
+    cap = 100
+    arc = make_policy("arc", cap)
+    fifo = make_policy("fifo", cap)
+    h_arc = sum(arc.access(int(k)) for k in keys)
+    h_fifo = sum(fifo.access(int(k)) for k in keys)
+    assert h_arc > h_fifo
+
+
+def test_lirs_scan_resistance():
+    """LIRS must not lose its hot set to a one-pass scan (its headline
+    property vs LRU)."""
+    rng = np.random.default_rng(2)
+    cap = 64
+    hot = list(rng.integers(0, 48, size=3000))
+    scan = list(range(1000, 1000 + 400))
+    tail = list(rng.integers(0, 48, size=3000))
+    lirs = make_policy("lirs", cap)
+    lru = make_policy("lru", cap)
+    for k in hot:
+        lirs.access(int(k)); lru.access(int(k))
+    for k in scan:
+        lirs.access(int(k)); lru.access(int(k))
+    h_lirs = sum(lirs.access(int(k)) for k in tail)
+    h_lru = sum(lru.access(int(k)) for k in tail)
+    assert h_lirs >= h_lru
+
+
+# --------------------------------------------------------------------------- #
+# simulator / Table 1 ordering                                                #
+# --------------------------------------------------------------------------- #
+
+CAPS = (("L1", 32), ("L2", 128), ("L3", 512))
+
+
+def test_pfcs_beats_baselines_on_relational_trace():
+    tr = db_join_trace(n_orders=2000, n_customers=400, n_items=800,
+                       n_queries=8000)
+    res = run_all_systems(tr, capacities=CAPS,
+                          systems=("lru", "arc", "semantic", "pfcs"))
+    assert res["pfcs"].hit_rate > res["lru"].hit_rate
+    assert res["pfcs"].hit_rate > res["arc"].hit_rate
+    # PFCS relationship accuracy is exactly 100% (Theorem 1);
+    # the semantic baseline must show false positives.
+    assert res["pfcs"].prefetch_precision == 1.0
+    assert res["semantic"].prefetch_precision < 1.0
+
+
+def test_pfcs_graceful_degradation_without_relationships():
+    tr = zipf_trace(n_keys=3000, n_accesses=6000)
+    lru = simulate_baseline("lru", tr, CAPS)
+    pfcs = simulate_pfcs(tr, CAPS)
+    assert abs(pfcs.hit_rate - lru.hit_rate) < 0.02
+    assert pfcs.prefetches_issued == 0
+
+
+def test_fig2a_scaling_monotone():
+    """PFCS advantage grows with relationship density (Fig. 2a)."""
+    speedups = []
+    for d in (0.1, 0.9):
+        tr = graph_walk_trace(n_keys=3000, relationship_density=d,
+                              n_accesses=8000)
+        res = run_all_systems(tr, capacities=CAPS, systems=("lru", "pfcs"))
+        row = derive_table1_row(res["pfcs"], res["lru"])
+        speedups.append(row["speedup"])
+    assert speedups[1] > speedups[0]
+
+
+def test_latency_energy_models_positive():
+    tr = db_join_trace(n_orders=500, n_customers=100, n_items=200,
+                       n_queries=2000)
+    s = simulate_pfcs(tr, CAPS)
+    assert s.avg_latency_ns() > 0
+    assert s.total_energy_nj() > 0
+    assert 0 <= s.hit_rate <= 1

@@ -1,0 +1,92 @@
+"""Serving tier: PFCS paged KV cache, expert cache, engine end-to-end."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.serving.expert_cache import ExpertCache
+from repro.serving.kv_cache import PagedKVCache
+
+
+def test_prefix_sharing_is_content_addressed():
+    kv = PagedKVCache(hbm_pages=64, page_size=4)
+    a = kv.register_request(1, [1, 2, 3, 4, 5, 6, 7, 8])
+    b = kv.register_request(2, [1, 2, 3, 4, 9, 9, 9, 9])
+    assert a[0] == b[0]          # identical first block -> same page
+    assert a[1] != b[1]
+
+
+def test_shared_prefix_via_gcd_exact():
+    kv = PagedKVCache(hbm_pages=64, page_size=4)
+    kv.register_request(1, list(range(16)))
+    kv.register_request(2, list(range(8)) + [99, 98, 97, 96])
+    shared = kv.shared_prefix(1, 2)
+    # exactly the two pages covering tokens 0..7 — no false sharing
+    assert len(shared) == 2
+    kv.register_request(3, [55] * 16)
+    assert kv.shared_prefix(1, 3) == []
+
+
+def test_page_prefetch_follows_chain():
+    kv = PagedKVCache(hbm_pages=8, page_size=4, prefetch_budget=4)
+    pages = kv.register_request(1, list(range(32)))   # 8-page chain
+    kv.touch(1, 0)
+    # successor of page 0 must now be HBM-resident (prefetched)
+    assert pages[1] in kv.hbm
+    assert kv.stats.prefetches >= 1
+
+
+def test_eviction_to_host_and_demand_return():
+    kv = PagedKVCache(hbm_pages=2, page_size=4, prefetch_budget=0)
+    kv.register_request(1, list(range(24)))           # 6 pages
+    for i in range(6):
+        kv.touch(1, i)
+    assert len(kv.hbm) <= 2
+    assert kv.stats.evictions > 0
+    tier = kv.touch(1, 0)                             # long-evicted page
+    assert tier == "host"
+
+
+def test_expert_cache_prefetch_beats_no_prefetch():
+    """With structured co-activation, PFCS prefetch lifts the HBM hit rate
+    vs an identical cache without relationship knowledge."""
+    rng = np.random.default_rng(0)
+    E, slots = 64, 16
+    groups = [tuple(rng.choice(E, size=8, replace=False)) for _ in range(6)]
+
+    def run(prefetch_budget):
+        ec = ExpertCache(E, hbm_slots=slots, prefetch_budget=prefetch_budget)
+        for g in groups:
+            ec.observe_routing([g])
+        for _ in range(300):
+            g = groups[int(rng.integers(len(groups)))]
+            # activation arrives expert-by-expert (the all-to-all schedule)
+            ec.activate([g[0]])
+            ec.activate(list(g[1:]))
+        return ec.stats.hit_rate
+
+    rng = np.random.default_rng(0)
+    with_pf = run(prefetch_budget=7)
+    rng = np.random.default_rng(0)
+    without = run(prefetch_budget=0)
+    assert with_pf > without
+
+
+def test_engine_end_to_end_smoke():
+    from repro.configs import get_smoke
+    from repro.models import build_model
+    from repro.serving.engine import ServingEngine
+
+    cfg = get_smoke("qwen2.5-3b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, max_batch=2, max_seq=96, page_size=8)
+    shared = list(range(16))          # two full shared pages
+    for i in range(3):
+        eng.submit(shared + [20 + i], max_new_tokens=4)
+    done = eng.run_until_idle()
+    assert len(done) == 3
+    assert all(len(r.generated) == 4 for r in done)
+    assert eng.pages.stats.shared_prefix_pages > 0
