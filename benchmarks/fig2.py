@@ -3,55 +3,69 @@
 (a) performance scaling vs workload complexity — PFCS speedup over LRU as
     relationship density rises (paper: 2.8x simple -> 13.7x complex);
 (b) hit rate vs cache size — PFCS holds its edge across sizes.
+
+Backend: the vectorized engine.  Fig 2a batches ALL densities through
+one ``vmap``-ed scan per system (every density trace has the same
+shape); Fig 2b compiles once per cache size (capacities are static
+shapes) and batches nothing.  ``--scale N`` multiplies trace length;
+the scalar loops topped out around 20k accesses — the engine sweeps
+200k+ (PR acceptance gate: ``--scale 10`` end-to-end).
+
+    PYTHONPATH=src python -m benchmarks.fig2 --scale 10
 """
 
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core import (derive_table1_row, graph_walk_trace,
-                        run_all_systems, simulate_baseline, simulate_pfcs)
+from repro.core import db_join_trace, derive_table1_row, graph_walk_trace
+from repro.core.engine import simulate_batch, simulate_trace
 
 from .common import emit, save_json
 
 
-def run_fig2a(densities=(0.05, 0.2, 0.4, 0.6, 0.8, 1.0), seed: int = 0):
+def run_fig2a(densities=(0.05, 0.2, 0.4, 0.6, 0.8, 1.0), seed: int = 0,
+              trace_scale: float = 1.0):
     caps = (("L1", 64), ("L2", 256), ("L3", 1024))
+    n_acc = int(20000 * trace_scale)
+    traces = [graph_walk_trace(n_keys=6000, relationship_density=d,
+                               n_accesses=n_acc, seed=seed)
+              for d in densities]
+    # one vmapped scan per system across every density
+    lru = simulate_batch(traces, "lru", caps)
+    # prefetch budget sized to the max relationship group (8) — the
+    # paper's §4.2 prefetches *all* discovered relations of a trigger
+    pfcs = simulate_batch(traces, "pfcs", caps, prefetch_budget=8)
     out = []
     print("\n== Fig 2a: speedup vs relationship density "
-          "(paper: 2.8x -> 13.7x) ==")
-    for d in densities:
-        tr = graph_walk_trace(n_keys=6000, relationship_density=d,
-                              n_accesses=20000, seed=seed)
-        # prefetch budget sized to the max relationship group (8) — the
-        # paper's §4.2 prefetches *all* discovered relations of a trigger
-        res = {"lru": simulate_baseline("lru", tr, caps),
-               "pfcs": simulate_pfcs(tr, caps, prefetch_budget=8)}
-        row = derive_table1_row(res["pfcs"], res["lru"])
+          f"(paper: 2.8x -> 13.7x; {n_acc} accesses/trace) ==")
+    for d, sl, sp in zip(densities, lru, pfcs):
+        row = derive_table1_row(sp, sl)
         out.append(dict(density=d, speedup=row["speedup"],
-                        pfcs_hit=res["pfcs"].hit_rate,
-                        lru_hit=res["lru"].hit_rate))
+                        pfcs_hit=sp.hit_rate, lru_hit=sl.hit_rate))
         print(f"  density={d:4.2f}  speedup={row['speedup']:5.2f}x  "
-              f"hit pfcs={res['pfcs'].hit_rate*100:5.1f}% "
-              f"lru={res['lru'].hit_rate*100:5.1f}%")
+              f"hit pfcs={sp.hit_rate*100:5.1f}% lru={sl.hit_rate*100:5.1f}%")
         emit(f"fig2a.density_{d:.2f}.speedup", row["speedup"])
     save_json("fig2a", out)
     return out
 
 
-def run_fig2b(sizes=(256, 512, 1024, 2048, 4096), seed: int = 0):
+def run_fig2b(sizes=(256, 512, 1024, 2048, 4096), seed: int = 0,
+              trace_scale: float = 1.0):
     out = []
-    print("\n== Fig 2b: hit rate vs total cache size ==")
-    from repro.core import db_join_trace
+    n_q = int(25000 * trace_scale)
+    print(f"\n== Fig 2b: hit rate vs total cache size ({n_q} accesses) ==")
     tr = db_join_trace(n_orders=6000, n_customers=900, n_items=1800,
-                       n_queries=25000, seed=seed)
+                       n_queries=n_q, seed=seed)
+    tables = None   # discovery tables are capacity-independent: build once
     for size in sizes:
         caps = (("L1", max(16, size // 16)),
                 ("L2", max(32, size // 4)),
                 ("L3", size - size // 16 - size // 4))
-        lru = simulate_baseline("lru", tr, caps)
-        arc = simulate_baseline("arc", tr, caps)
-        pfcs = simulate_pfcs(tr, caps)
+        if tables is None:
+            from repro.core.engine import pfcs_tables
+            tables = pfcs_tables(tr, caps)
+        lru = simulate_trace(tr, "lru", caps)
+        arc = simulate_trace(tr, "arc", caps)
+        pfcs = simulate_trace(tr, "pfcs", caps, tables=tables)
         out.append(dict(size=size, lru=lru.hit_rate, arc=arc.hit_rate,
                         pfcs=pfcs.hit_rate))
         print(f"  size={size:5d}  pfcs={pfcs.hit_rate*100:5.1f}%  "
@@ -62,5 +76,10 @@ def run_fig2b(sizes=(256, 512, 1024, 2048, 4096), seed: int = 0):
 
 
 if __name__ == "__main__":
-    run_fig2a()
-    run_fig2b()
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="trace-length multiplier (engine handles >=10x)")
+    args = ap.parse_args()
+    run_fig2a(trace_scale=args.scale)
+    run_fig2b(trace_scale=args.scale)

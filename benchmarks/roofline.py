@@ -130,8 +130,41 @@ def suggestion(dom: str, cfg, shape) -> str:
             "compute, int8-compress DP grads, remap sharding axes")
 
 
+def engine_roofline(verbose: bool = True) -> Dict:
+    """Analytic roofline for the trace-simulation engine's scan step.
+
+    The engine (repro.core.engine) carries fixed-shape state through
+    ``lax.scan``; each step touches the whole state once (reads + the
+    rewritten carry), so per-access traffic is ~2x the state footprint.
+    On HBM that bounds steps/s at BW / bytes; the state for realistic
+    configs fits VMEM (<16 MB), where the bound is the VPU instead —
+    both are reported so the sweep's wall clock has a sanity anchor.
+    """
+    caps = (64, 256, 2048)
+    n_keys = 20_000
+    # PFCS level slots: keys/t/deg int32 + pf bool; per-key where int32
+    level_bytes = sum((c + 1) * (4 + 4 + 4 + 1) for c in caps)
+    perkey_bytes = 4 * n_keys
+    state = level_bytes + perkey_bytes
+    traffic = 2 * state                      # read carry + write carry
+    steps_s_hbm = HW.HBM_BW / traffic
+    row = dict(state_bytes=state, bytes_per_access=traffic,
+               hbm_bound_steps_per_s=steps_s_hbm,
+               fits_vmem=state < 16 * 2**20)
+    if verbose:
+        print("\n== Engine roofline (PFCS config L1=64/L2=256/L3=2048, "
+              f"K={n_keys}) ==")
+        print(f"  state={state/2**10:.0f} KiB  traffic={traffic/2**10:.0f} "
+              f"KiB/access  HBM-bound rate={steps_s_hbm/1e6:.2f} M acc/s  "
+              f"fits VMEM={row['fits_vmem']}")
+        emit("roofline.engine.hbm_bound_macc_s", steps_s_hbm / 1e6)
+    save_json("roofline_engine", row)
+    return row
+
+
 def run(verbose: bool = True) -> Dict:
     rows = {}
+    rows["engine"] = engine_roofline(verbose)
     hdr = (f"{'arch':22s} {'shape':11s} {'compute_s':>10s} {'memory_s':>10s} "
            f"{'coll_s':>10s} {'dominant':>9s} {'MF/HLO':>7s} {'args_GiB':>8s} "
            f"{'temp_GiB':>8s}")

@@ -19,6 +19,9 @@ def main(argv=None) -> None:
                     help="paper-scale trial counts (slower)")
     ap.add_argument("--skip-roofline", action="store_true",
                     help="skip the dry-run-artifact roofline table")
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="trace-length multiplier for table1/fig2 "
+                         "(the vectorized engine handles >=10x)")
     args = ap.parse_args(argv)
 
     t0 = time.time()
@@ -26,9 +29,9 @@ def main(argv=None) -> None:
 
     from . import table1, fig2, cases, kernel_bench
 
-    table1.run(n_trials=20 if args.full else 4)
-    fig2.run_fig2a()
-    fig2.run_fig2b()
+    table1.run(n_trials=20 if args.full else 4, trace_scale=args.scale)
+    fig2.run_fig2a(trace_scale=args.scale)
+    fig2.run_fig2b(trace_scale=args.scale)
     cases.case_db()
     cases.case_ml()
     cases.case_hft()

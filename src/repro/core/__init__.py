@@ -25,6 +25,15 @@ from .traces import (Trace, db_join_trace, graph_walk_trace, hft_trace,
 from .simulator import (DEFAULT_LEVELS, fast_lru_hit_rate, run_all_systems,
                         simulate_baseline, simulate_pfcs, simulate_semantic)
 
+
+def __getattr__(name):
+    # lazy: the vectorized engine pulls in jax at import time; callers that
+    # only need the host-side core shouldn't pay for it (PEP 562)
+    if name == "engine":
+        from . import engine
+        return engine
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 __all__ = [
     "CacheLevel", "HierarchicalPrimeAllocator", "PrimePool", "is_prime",
     "segmented_sieve", "sieve_primes", "spf_table",

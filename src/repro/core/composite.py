@@ -143,6 +143,13 @@ class CompositeRegistry:
     def degree(self, p: int) -> int:
         return self._prime_degree.get(p, 0)
 
+    def primes_array(self) -> np.ndarray:
+        """Sorted int64 array of every live member prime — the trial-
+        division pool for the batched factorize kernel (engine bulk
+        discovery, DESIGN.md §3)."""
+        return np.fromiter(sorted(self._prime_degree), dtype=np.int64,
+                           count=len(self._prime_degree))
+
     def composites_array(self) -> np.ndarray:
         """Flat int64 array of all live composites (kernel input)."""
         if self._dirty:

@@ -1,0 +1,76 @@
+"""Vectorized baseline hierarchy: policy residency + recency-shadow tiers.
+
+Array twin of ``simulator._BaselineHierarchy`` (see its docstring for the
+modelling rationale): residency is decided by ONE policy instance over
+the summed level capacity, while tier *attribution* for the latency /
+energy model uses policy-independent nested exact-LRU shadows of sizes
+``c1 < c1+c2 < ... < Ctot``.
+
+Because the nested shadows see the identical touch stream, the LRU sets
+are nested, and a single slot array of size ``Ctot`` (the largest
+shadow) represents all of them at once: a key is in shadow ``i`` iff its
+*recency rank* — one plus the number of tracked keys touched more
+recently — is ``<= cum_i``.  A resident key absent from every shadow is
+charged the MEM tier, exactly like the oracle.
+
+Per access, in oracle order:
+
+    1. tier  := shadow rank of the key (BEFORE the touch)
+    2. hit   := policy residency       (BEFORE the policy update)
+    3. touch the shadow, step the policy
+
+The step emits ``(hit, tier_idx)`` with ``tier_idx in [0, L]`` where
+``L`` is the MEM bin.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+
+from .layout import EMPTY, init_stamps, occupied
+from .policies_vec import VEC_POLICIES
+
+__all__ = ["build_hierarchy"]
+
+
+def build_hierarchy(policy: str, capacities: Sequence[Tuple[str, int]],
+                    n_keys: int):
+    """Returns ``(state, step)`` for one baseline system.
+
+    ``step(state, key, now) -> (state, (hit, tier_idx))``; ``now`` must
+    advance by ``POLICY_TICKS`` per access (the shadow shares the
+    policy's stamp space but writes a disjoint array, so one stamp per
+    access is enough for both).
+    """
+    caps = [int(c) for _, c in capacities]
+    cums = jnp.asarray(jnp.cumsum(jnp.asarray(caps, jnp.int32)), jnp.int32)
+    total = int(sum(caps))
+    n_levels = len(caps)
+
+    pol_state, pol_step = VEC_POLICIES[policy](total, n_keys)
+    state = {
+        "pol": pol_state,
+        "shk": jnp.full((total,), EMPTY, jnp.int32),
+        "sht": init_stamps(total),
+    }
+
+    def step(s, key, now):
+        shk, sht = s["shk"], s["sht"]
+        match = shk == key
+        in_shadow = jnp.any(match)
+        t_key = jnp.max(jnp.where(match, sht, -jnp.iinfo(jnp.int32).max))
+        rank = 1 + jnp.sum(occupied(shk) & (sht > t_key))
+        tier = jnp.where(in_shadow, jnp.sum(rank > cums), n_levels)
+
+        # shadow touch == LRU update over the largest shadow
+        victim = jnp.argmin(sht)
+        shk2 = jnp.where(in_shadow, shk, shk.at[victim].set(key))
+        sht2 = jnp.where(match, now, sht)
+        sht2 = jnp.where(in_shadow, sht2, sht2.at[victim].set(now))
+
+        pol, hit = pol_step(s["pol"], key, now)
+        return {"pol": pol, "shk": shk2, "sht": sht2}, (hit, tier)
+
+    return state, step

@@ -1,0 +1,77 @@
+"""Shared array-state layout conventions and helpers (DESIGN.md §4.1).
+
+Every engine structure is one of two fixed-shape layouts:
+
+**Slot arrays** (bounded structures: policy lists, cache levels, the
+recency shadows).  A structure of capacity ``C`` is a pair/triple of
+``(C,)`` (or ``(C+1,)`` where a one-slot overflow reserve is needed)
+arrays::
+
+    keys : int32, ``EMPTY`` (= -1) marks a free slot
+    t    : int32 recency/insertion stamp; stale values in free slots are
+           ignored (occupancy is defined by ``keys != EMPTY`` alone)
+
+Free slots are initialized with distinct *negative* stamps so that
+"replace the LRU slot" (``argmin`` over stamps) naturally fills empty
+slots first — exactly an ``OrderedDict`` that evicts its front.  Real
+stamps are >= 0 and strictly increase, so ordering ties cannot occur
+between live entries.
+
+**Per-key arrays** (unbounded structures: the LIRS stack, PFCS residency
+index).  Shape ``(K,)`` over the trace's key universe; a value of -1
+means "not present".  This trades O(K) memory for O(1) scatter/gather
+per event, which is the right trade on an accelerator and is what makes
+``vmap`` batching trivial.
+
+Timestamps are int32 *micro-op* counters: each trace step consumes a
+fixed number ``M`` of ticks (one per potential ordered mutation within
+the step) so that multi-insert steps (PFCS demote cascades + prefetch
+bursts) keep the exact within-level ordering of the scalar oracle's
+``OrderedDict``s.  int32 bounds the engine to ``2**31 / M`` steps —
+~134M accesses at PFCS's largest ``M`` of 16 — checked at build time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["EMPTY", "I32MAX", "occupied", "count", "masked_argmin",
+           "first_empty", "tree_where", "init_stamps"]
+
+EMPTY = -1                                  # free-slot key sentinel
+I32MAX = jnp.iinfo(jnp.int32).max
+
+
+def occupied(keys: jnp.ndarray) -> jnp.ndarray:
+    """Boolean occupancy mask of a slot array."""
+    return keys != EMPTY
+
+
+def count(keys: jnp.ndarray) -> jnp.ndarray:
+    """Number of live entries (int32)."""
+    return jnp.sum(occupied(keys)).astype(jnp.int32)
+
+
+def masked_argmin(values: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Index of the smallest ``values[i]`` with ``mask[i]``; ties and the
+    all-masked case resolve to the lowest index (callers guard on
+    emptiness where the oracle does)."""
+    return jnp.argmin(jnp.where(mask, values, I32MAX))
+
+
+def first_empty(keys: jnp.ndarray) -> jnp.ndarray:
+    """Index of the first free slot (callers guarantee one exists)."""
+    return jnp.argmax(keys == EMPTY)
+
+
+def init_stamps(n: int) -> jnp.ndarray:
+    """Distinct negative stamps so empties fill in slot order first."""
+    return jnp.arange(-n, 0, dtype=jnp.int32)
+
+
+def tree_where(pred, if_true, if_false):
+    """Leafwise ``jnp.where`` over two identical pytrees (step gating for
+    padded/ragged batch entries)."""
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(pred, a, b), if_true, if_false)

@@ -1,0 +1,198 @@
+"""Vectorized PFCS hierarchy: array twin of ``pfcs_cache.PFCSCache``.
+
+State layout (DESIGN.md §4.2)
+-----------------------------
+Each level of capacity ``C`` is four ``(C+1,)`` arrays — ``keys``,
+``t`` (recency stamp), ``pf`` (brought in by prefetch, not yet
+demanded), ``deg`` (live relationship degree, snapshotted at insert from
+the static degree table).  The extra slot absorbs the oracle's
+add-then-evict transient, so an eviction always runs over a *full*
+``C+1``-slot window and ``top_k`` sizes stay static.
+
+``where_of`` is a per-key int32 array mapping key -> resident level (or
+-1): O(1) hit detection and the residency check that guards prefetch
+admission, updated by scatter on every move.
+
+Relationship discovery is *table-driven*: relationships are registered
+at schema time and immutable during a trace, so the oracle's
+``IntelligentPrefetcher.decide`` collapses to a static ``(K, budget)``
+target table plus a ``(K,)`` degree table (built in ``tables.py``,
+optionally through the Pallas divisibility/factorize kernels).  The
+weight-ranked target ORDER is preserved in the table, which is what
+makes the engine's prefetch admissions bit-identical to the oracle's.
+
+Stamp discipline: each access consumes ``M = L (+ budget)`` micro-op
+ticks — tick ``base+i`` for the level-``i`` insert of the demand /
+demote cascade, tick ``base+L+j`` for the ``j``-th prefetch insert —
+reproducing the oracle's ``OrderedDict`` within-level ordering exactly.
+
+Victim selection replicates ``PFCSCache._select_victim``: among the
+``min(victim_window, C+1)`` least-recent entries, evict the lowest
+relationship degree, ties to the older entry (strict-``<`` scan order in
+the oracle == lexicographic ``(deg, stamp)`` argmin here, since stamps
+are unique).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+
+from .layout import EMPTY, I32MAX, count, first_empty, init_stamps, occupied
+
+__all__ = ["build_pfcs"]
+
+
+def _safe(idx):
+    """Clamp a possibly-EMPTY key for gather/scatter; callers mask."""
+    return jnp.maximum(idx, 0)
+
+
+def _level_init(cap: int):
+    n = cap + 1
+    return {"keys": jnp.full((n,), EMPTY, jnp.int32),
+            "t": init_stamps(n),
+            "pf": jnp.zeros((n,), jnp.bool_),
+            "deg": jnp.zeros((n,), jnp.int32)}
+
+
+def _add(lv, k, tick, pf, dg, do):
+    e = first_empty(lv["keys"])
+    return {"keys": jnp.where(do, lv["keys"].at[e].set(k), lv["keys"]),
+            "t": jnp.where(do, lv["t"].at[e].set(tick), lv["t"]),
+            "pf": jnp.where(do, lv["pf"].at[e].set(pf), lv["pf"]),
+            "deg": jnp.where(do, lv["deg"].at[e].set(dg), lv["deg"])}
+
+
+def _evict(lv, cap: int, window: int, do):
+    """Relationship-aware replacement over a full C+1-slot level.
+
+    The ``w`` least-recent slots are peeled off with ``w`` chained
+    masked argmins rather than ``lax.top_k`` — inside a CPU scan body
+    top_k lowers to a full sort (~140x slower at w=8; measured in
+    benchmarks/kernel_bench.py), while chained argmins are w cheap
+    vector reductions and stay exact because stamps are unique.
+    """
+    w = min(window, cap + 1)
+    wt = jnp.where(occupied(lv["keys"]), lv["t"], I32MAX)
+    best = jnp.zeros((), jnp.int32)          # winning slot so far
+    best_deg = jnp.full((), I32MAX, jnp.int32)
+    cur = wt
+    for _ in range(w):                       # oldest -> newest window scan
+        i = jnp.argmin(cur)
+        take = lv["deg"][i] < best_deg       # strict <: ties keep the older
+        best = jnp.where(take, i, best)
+        best_deg = jnp.where(take, lv["deg"][i], best_deg)
+        cur = cur.at[i].set(I32MAX)
+    v = best
+    vk, vpf, vdeg = lv["keys"][v], lv["pf"][v], lv["deg"][v]
+    lv = {**lv, "keys": jnp.where(do, lv["keys"].at[v].set(EMPTY),
+                                  lv["keys"])}
+    return lv, vk, vpf, vdeg
+
+
+def build_pfcs(capacities: Sequence[Tuple[str, int]], n_keys: int,
+               prefetch_budget: int, victim_window: int,
+               enable_prefetch: bool, trigger_always: bool):
+    """Returns ``(state, micro_ticks, step)``.
+
+    ``step(state, key, base, tgt_tbl, truth_tbl, deg_tbl) -> state`` where
+    ``base`` advances by ``micro_ticks`` per access; counters live inside
+    ``state["stats"]``.  ``key < 0`` marks a padded (no-op) step, which
+    is what makes ragged vmap batches exact.
+    """
+    caps = [int(c) for _, c in capacities]
+    L = len(caps)
+    budget = prefetch_budget if enable_prefetch else 0
+    micro = L + budget
+
+    state = {
+        "levels": tuple(_level_init(c) for c in caps),
+        "where": jnp.full((n_keys,), -1, jnp.int32),
+        "stats": {"hits": jnp.zeros((L,), jnp.int32),
+                  "miss": jnp.zeros((), jnp.int32),
+                  "demand": jnp.zeros((), jnp.int32),
+                  "issued": jnp.zeros((), jnp.int32),
+                  "used": jnp.zeros((), jnp.int32),
+                  "true": jnp.zeros((), jnp.int32)},
+    }
+
+    def step(s, key, base, tgt_tbl, truth_tbl, deg_tbl):
+        levels = list(s["levels"])
+        where_of = s["where"]
+        st = s["stats"]
+        valid = key >= 0
+        k = _safe(key)
+
+        lvl = where_of[k]
+        hit = valid & (lvl >= 0)
+        was_pf = jnp.zeros((), jnp.bool_)
+        for i in range(L):
+            m = levels[i]["keys"] == k
+            was_pf = was_pf | (hit & (lvl == i) & jnp.any(m & levels[i]["pf"]))
+
+        # L0 hit: touch in place, clear the prefetched flag
+        hit0 = hit & (lvl == 0)
+        m0 = (levels[0]["keys"] == k) & hit0
+        levels[0] = {**levels[0],
+                     "t": jnp.where(m0, base, levels[0]["t"]),
+                     "pf": jnp.where(m0, False, levels[0]["pf"])}
+
+        # deeper hit: remove, then re-insert at L0 through the cascade
+        for i in range(1, L):
+            m = (levels[i]["keys"] == k) & hit & (lvl == i)
+            levels[i] = {**levels[i],
+                         "keys": jnp.where(m, EMPTY, levels[i]["keys"])}
+
+        # demand insert + demote cascade
+        pend_k, pend_pf = k, jnp.zeros((), jnp.bool_)
+        pend_deg = deg_tbl[k]
+        pend_do = valid & ~hit0
+        for i in range(L):
+            levels[i] = _add(levels[i], pend_k, base + i, pend_pf, pend_deg,
+                             pend_do)
+            where_of = jnp.where(pend_do,
+                                 where_of.at[_safe(pend_k)].set(i), where_of)
+            over = pend_do & (count(levels[i]["keys"]) > caps[i])
+            levels[i], vk, vpf, vdeg = _evict(levels[i], caps[i],
+                                              victim_window, over)
+            pend_k, pend_pf, pend_deg, pend_do = vk, vpf, vdeg, over
+        where_of = jnp.where(pend_do,
+                             where_of.at[_safe(pend_k)].set(-1), where_of)
+
+        # deterministic relationship prefetch into the last level
+        issued = jnp.zeros((), jnp.int32)
+        true_cnt = jnp.zeros((), jnp.int32)
+        if enable_prefetch:
+            trigger = valid & (jnp.bool_(trigger_always) | ~hit | was_pf)
+            tgts = tgt_tbl[k]
+            truths = truth_tbl[k]
+            last = L - 1
+            for j in range(budget):
+                tgt = tgts[j]
+                resident = where_of[_safe(tgt)] >= 0
+                do = trigger & (tgt >= 0) & ~resident
+                issued = issued + do
+                true_cnt = true_cnt + (do & truths[j])
+                levels[last] = _add(levels[last], tgt, base + L + j,
+                                    jnp.ones((), jnp.bool_),
+                                    deg_tbl[_safe(tgt)], do)
+                where_of = jnp.where(do, where_of.at[_safe(tgt)].set(last),
+                                     where_of)
+                over = do & (count(levels[last]["keys"]) > caps[last])
+                levels[last], vk, _, _ = _evict(levels[last], caps[last],
+                                                victim_window, over)
+                where_of = jnp.where(over, where_of.at[_safe(vk)].set(-1),
+                                     where_of)
+
+        onehot = (jnp.arange(L, dtype=jnp.int32) == lvl) & hit
+        stats = {"hits": st["hits"] + onehot,
+                 "miss": st["miss"] + (valid & ~hit),
+                 "demand": st["demand"] + valid,
+                 "issued": st["issued"] + issued,
+                 "used": st["used"] + (hit & was_pf),
+                 "true": st["true"] + true_cnt}
+        return {"levels": tuple(levels), "where": where_of, "stats": stats}
+
+    return state, micro, step

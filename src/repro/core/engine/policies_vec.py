@@ -1,0 +1,398 @@
+"""Vectorized replacement policies: array-state twins of ``policies.py``.
+
+Each policy is an ``(init, step)`` pair:
+
+    init(capacity, n_keys) -> state pytree           (host, shapes only)
+    step(state, key, now)  -> (state', hit: bool[])  (traced, fixed shape)
+
+``step`` replicates the corresponding ``CachePolicy.access`` *exactly* —
+same residency decisions, same evictions, same adaptive-parameter
+arithmetic — so a ``lax.scan`` over a trace produces bit-identical hit
+sequences to the scalar loop (property enforced by tests/test_engine.py).
+State layouts follow DESIGN.md §4.1 (slot arrays for bounded lists,
+per-key arrays for LIRS's unbounded stack); the equivalence arguments
+for each policy are inlined below next to the code they justify.
+
+``now`` is the per-access stamp.  Policies mutate at most one slot per
+list per access, so a single stamp per access suffices here (PFCS's
+multi-insert steps are the only place micro-op stamps are needed — see
+``pfcs_vec.py``).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .layout import (EMPTY, I32MAX, count, first_empty, init_stamps,
+                     masked_argmin, occupied, tree_where)
+
+__all__ = ["VEC_POLICIES", "POLICY_TICKS", "LIRS_TICKS"]
+
+
+# --------------------------------------------------------------------------- #
+# LRU — also the recency-shadow primitive reused by hierarchy.py              #
+# --------------------------------------------------------------------------- #
+
+def lru_init(capacity: int, n_keys: int):
+    del n_keys
+    return {"keys": jnp.full((capacity,), EMPTY, jnp.int32),
+            "t": init_stamps(capacity)}
+
+
+def lru_step(s, key, now):
+    # Oracle: hit -> move_to_end; miss -> insert, evict front if over.
+    # Slot form: hit -> restamp; miss -> overwrite argmin-stamp slot
+    # (empty slots carry the smallest stamps, so they fill first and a
+    # genuine eviction only happens when full — identical semantics).
+    match = s["keys"] == key
+    hit = jnp.any(match)
+    victim = jnp.argmin(s["t"])
+    keys = jnp.where(hit, s["keys"], s["keys"].at[victim].set(key))
+    t = jnp.where(match, now, s["t"])
+    t = jnp.where(hit, t, t.at[victim].set(now))
+    return {"keys": keys, "t": t}, hit
+
+
+# --------------------------------------------------------------------------- #
+# FIFO                                                                        #
+# --------------------------------------------------------------------------- #
+
+def fifo_init(capacity: int, n_keys: int):
+    del n_keys
+    return {"keys": jnp.full((capacity,), EMPTY, jnp.int32),
+            "ins": init_stamps(capacity)}
+
+
+def fifo_step(s, key, now):
+    # Hits never restamp (insertion order, not recency, governs FIFO).
+    hit = jnp.any(s["keys"] == key)
+    victim = jnp.argmin(s["ins"])
+    keys = jnp.where(hit, s["keys"], s["keys"].at[victim].set(key))
+    ins = jnp.where(hit, s["ins"], s["ins"].at[victim].set(now))
+    return {"keys": keys, "ins": ins}, hit
+
+
+# --------------------------------------------------------------------------- #
+# 2Q (Johnson & Shasha '94) — A1in FIFO / A1out ghosts / Am LRU               #
+# --------------------------------------------------------------------------- #
+
+def twoq_init(capacity: int, n_keys: int, kin_frac: float = 0.25,
+              kout_frac: float = 0.5):
+    del n_keys
+    kin = max(1, int(capacity * kin_frac))
+    kout = max(1, int(capacity * kout_frac))
+    km = max(1, capacity - kin)
+    return {"a1k": jnp.full((kin,), EMPTY, jnp.int32), "a1t": init_stamps(kin),
+            "aok": jnp.full((kout,), EMPTY, jnp.int32), "aot": init_stamps(kout),
+            "amk": jnp.full((km,), EMPTY, jnp.int32), "amt": init_stamps(km)}
+
+
+def twoq_step(s, key, now):
+    in_am = jnp.any(s["amk"] == key)
+    in_a1 = jnp.any(s["a1k"] == key)
+    in_ao = jnp.any(s["aok"] == key)
+    hit = in_am | in_a1
+    miss_hot = (~hit) & in_ao        # second touch within window -> Am
+    miss_new = (~hit) & ~in_ao       # cold insert -> A1in
+
+    # Am hit: touch (A1in hits deliberately do not restamp — classic 2Q).
+    amt = jnp.where(s["amk"] == key, now, s["amt"])
+
+    # miss_hot: drop the ghost, admit into Am replacing its LRU/empty slot.
+    am_v = jnp.argmin(s["amt"])
+    amk = jnp.where(miss_hot, s["amk"].at[am_v].set(key), s["amk"])
+    amt = jnp.where(miss_hot, amt.at[am_v].set(now), amt)
+    ghost = miss_hot & (s["aok"] == key)
+    aok = jnp.where(ghost, EMPTY, s["aok"])
+    # restamp the freed ghost slot below every init stamp so the next
+    # push reuses it instead of evicting a live ghost (the oracle only
+    # drops a ghost when A1out is actually full)
+    aot_base = jnp.where(ghost, jnp.int32(-I32MAX), s["aot"])
+
+    # miss_new: admit into A1in; a displaced occupant (oldest insertion)
+    # becomes an A1out ghost, displacing the oldest ghost if full.
+    a1_v = jnp.argmin(s["a1t"])
+    displaced = s["a1k"][a1_v]
+    spill = miss_new & (displaced != EMPTY)
+    a1k = jnp.where(miss_new, s["a1k"].at[a1_v].set(key), s["a1k"])
+    a1t = jnp.where(miss_new, s["a1t"].at[a1_v].set(now), s["a1t"])
+    ao_v = jnp.argmin(aot_base)
+    aok = jnp.where(spill, aok.at[ao_v].set(displaced), aok)
+    aot = jnp.where(spill, aot_base.at[ao_v].set(now), aot_base)
+
+    return {"a1k": a1k, "a1t": a1t, "aok": aok, "aot": aot,
+            "amk": amk, "amt": amt}, hit
+
+
+# --------------------------------------------------------------------------- #
+# ARC (Megiddo & Modha, FAST'03)                                              #
+# --------------------------------------------------------------------------- #
+#
+# T1/T2 resident + B1/B2 ghost lists as slot arrays.  List-size bounds
+# from the published invariants (|T1|+|B1| <= c, |T1|+|T2| <= c,
+# total <= 2c) size the arrays: c slots for T1/T2/B1 and 2c+1 for B2
+# (the +1 absorbs the transient push-before-pop in Case III).  The
+# adaptive target ``p`` is float64, matching CPython float arithmetic of
+# the oracle exactly (the engine driver runs under ``jax.enable_x64``).
+
+def _pop_slot(keys, idx, cond):
+    return jnp.where(cond, keys.at[idx].set(EMPTY), keys)
+
+
+def _push_slot(keys, times, k, now, cond):
+    e = first_empty(keys)
+    return (jnp.where(cond, keys.at[e].set(k), keys),
+            jnp.where(cond, times.at[e].set(now), times))
+
+
+def arc_build(capacity: int, n_keys: int):
+    del n_keys
+    c = capacity
+
+    def slots(n):
+        return (jnp.full((n,), EMPTY, jnp.int32),
+                jnp.zeros((n,), jnp.int32))
+
+    t1k, t1t = slots(c)
+    t2k, t2t = slots(c)
+    b1k, b1t = slots(c)
+    b2k, b2t = slots(2 * c + 1)
+    state = {"t1k": t1k, "t1t": t1t, "t2k": t2k, "t2t": t2t,
+             "b1k": b1k, "b1t": b1t, "b2k": b2k, "b2t": b2t,
+             "p": jnp.zeros((), jnp.float64)}
+
+    def replace(s, in_b2, now, active):
+        """ARC REPLACE: demote the LRU of T1 (-> B1 ghost) or T2 (-> B2),
+        steered by the adaptive target p.  ``active`` masks the whole
+        subroutine (Case IV only calls it on some paths)."""
+        n_t1 = count(s["t1k"])
+        n_t2 = count(s["t2k"])
+        p_int = s["p"].astype(jnp.int32)   # int(p): trunc == floor, p >= 0
+        cond_t1 = (n_t1 > 0) & ((in_b2 & (n_t1 == p_int)) | (n_t1 > p_int))
+        do_t1 = active & (cond_t1 | ((~cond_t1) & (n_t2 == 0) & (n_t1 > 0)))
+        do_t2 = active & (~cond_t1) & (n_t2 > 0)
+        i1 = masked_argmin(s["t1t"], occupied(s["t1k"]))
+        k1 = s["t1k"][i1]
+        t1k_ = _pop_slot(s["t1k"], i1, do_t1)
+        b1k_, b1t_ = _push_slot(s["b1k"], s["b1t"], k1, now, do_t1)
+        i2 = masked_argmin(s["t2t"], occupied(s["t2k"]))
+        k2 = s["t2k"][i2]
+        t2k_ = _pop_slot(s["t2k"], i2, do_t2)
+        b2k_, b2t_ = _push_slot(s["b2k"], s["b2t"], k2, now, do_t2)
+        return {**s, "t1k": t1k_, "b1k": b1k_, "b1t": b1t_,
+                "t2k": t2k_, "b2k": b2k_, "b2t": b2t_}
+
+    def step(s, key, now):
+        in_t1 = jnp.any(s["t1k"] == key)
+        in_t2 = jnp.any(s["t2k"] == key)
+        in_b1 = jnp.any(s["b1k"] == key)
+        in_b2 = jnp.any(s["b2k"] == key)
+        hit = in_t1 | in_t2
+
+        def case_hit_t1(s):
+            # Case I via T1: promote to T2 MRU.
+            t1k_ = jnp.where(s["t1k"] == key, EMPTY, s["t1k"])
+            t2k_, t2t_ = _push_slot(s["t2k"], s["t2t"], key, now, True)
+            return {**s, "t1k": t1k_, "t2k": t2k_, "t2t": t2t_}
+
+        def case_hit_t2(s):
+            return {**s, "t2t": jnp.where(s["t2k"] == key, now, s["t2t"])}
+
+        def case_ghost_b1(s):
+            n_b1 = count(s["b1k"]).astype(jnp.float64)
+            n_b2 = count(s["b2k"]).astype(jnp.float64)
+            delta = jnp.maximum(1.0, n_b2 / jnp.maximum(n_b1, 1.0))
+            s = {**s, "p": jnp.minimum(jnp.float64(c), s["p"] + delta)}
+            s = replace(s, jnp.bool_(False), now, jnp.bool_(True))
+            b1k_ = jnp.where(s["b1k"] == key, EMPTY, s["b1k"])
+            t2k_, t2t_ = _push_slot(s["t2k"], s["t2t"], key, now, True)
+            return {**s, "b1k": b1k_, "t2k": t2k_, "t2t": t2t_}
+
+        def case_ghost_b2(s):
+            n_b1 = count(s["b1k"]).astype(jnp.float64)
+            n_b2 = count(s["b2k"]).astype(jnp.float64)
+            delta = jnp.maximum(1.0, n_b1 / jnp.maximum(n_b2, 1.0))
+            s = {**s, "p": jnp.maximum(jnp.float64(0.0), s["p"] - delta)}
+            s = replace(s, jnp.bool_(True), now, jnp.bool_(True))
+            b2k_ = jnp.where(s["b2k"] == key, EMPTY, s["b2k"])
+            t2k_, t2t_ = _push_slot(s["t2k"], s["t2t"], key, now, True)
+            return {**s, "b2k": b2k_, "t2k": t2k_, "t2t": t2t_}
+
+        def case_miss(s):
+            n_t1 = count(s["t1k"])
+            n_b1 = count(s["b1k"])
+            n_t2 = count(s["t2k"])
+            n_b2 = count(s["b2k"])
+            l1 = n_t1 + n_b1
+            total = l1 + n_t2 + n_b2
+            case_a = l1 == c
+            drop_b1 = case_a & (n_t1 < c)
+            drop_t1 = case_a & (n_t1 >= c)
+            case_b = (~case_a) & (total >= c)
+            drop_b2 = case_b & (total == 2 * c)
+            ib1 = masked_argmin(s["b1t"], occupied(s["b1k"]))
+            it1 = masked_argmin(s["t1t"], occupied(s["t1k"]))
+            ib2 = masked_argmin(s["b2t"], occupied(s["b2k"]))
+            s = {**s,
+                 "b1k": _pop_slot(s["b1k"], ib1, drop_b1),
+                 "t1k": _pop_slot(s["t1k"], it1, drop_t1),
+                 "b2k": _pop_slot(s["b2k"], ib2, drop_b2)}
+            s = replace(s, jnp.bool_(False), now, drop_b1 | case_b)
+            t1k_, t1t_ = _push_slot(s["t1k"], s["t1t"], key, now, True)
+            return {**s, "t1k": t1k_, "t1t": t1t_}
+
+        case = jnp.where(in_t1, 0, jnp.where(in_t2, 1, jnp.where(
+            in_b1, 2, jnp.where(in_b2, 3, 4))))
+        s = jax.lax.switch(case, [case_hit_t1, case_hit_t2, case_ghost_b1,
+                                  case_ghost_b2, case_miss], s)
+        return s, hit
+
+    return state, step
+
+
+# --------------------------------------------------------------------------- #
+# LIRS (Jiang & Zhang, SIGMETRICS'02)                                         #
+# --------------------------------------------------------------------------- #
+#
+# The recency stack S is unbounded (it holds non-resident HIR ghosts), so
+# LIRS is the one policy carried as *per-key* arrays over the key
+# universe instead of slot arrays.  Stack membership is reconstructed
+# from a threshold instead of simulating pruning:
+#
+#     in_S(k)  <=>  s_t[k] >= 0  and  s_t[k] >= min{ s_t[j] : j is LIR }
+#
+# which is exact because (a) after every oracle stack-prune the bottom of
+# S is LIR, so pruning removes precisely the entries stamped below the
+# oldest LIR, and (b) the oldest-LIR stamp is non-decreasing, so pruned
+# entries can never re-enter.  Each access consumes 3 stamp ticks:
+# +0 capacity-stage queue push, +1 stack write, +2 insert-stage queue
+# push — preserving the oracle's within-access queue ordering.
+
+_LIR, _HIR, _NONE = 0, 1, 2
+LIRS_TICKS = 3
+
+
+def lirs_build(capacity: int, n_keys: int, hir_frac: float = 0.05):
+    lhirs = max(1, int(capacity * hir_frac))
+    llirs = max(1, capacity - lhirs)
+    K = n_keys
+    state = {"status": jnp.full((K,), _NONE, jnp.int32),
+             "s_t": jnp.full((K,), -1, jnp.int32),
+             "q_t": jnp.full((K,), -1, jnp.int32),
+             "res": jnp.zeros((K,), jnp.bool_),
+             "n_lir": jnp.zeros((), jnp.int32),
+             "n_res": jnp.zeros((), jnp.int32)}
+
+    def lir_min(s):
+        return jnp.min(jnp.where(s["status"] == _LIR, s["s_t"], I32MAX))
+
+    def in_stack(s, key):
+        st = s["s_t"][key]
+        return (st >= 0) & (st >= lir_min(s))
+
+    def demote_bottom(s, tick):
+        """Bottom LIR -> HIR: leaves S; enters Q if resident."""
+        do = s["n_lir"] > 0
+        b = masked_argmin(s["s_t"], s["status"] == _LIR)
+        res_b = s["res"][b]
+        return {**s,
+                "s_t": jnp.where(do, s["s_t"].at[b].set(-1), s["s_t"]),
+                "status": jnp.where(do, s["status"].at[b].set(_HIR),
+                                    s["status"]),
+                "n_lir": s["n_lir"] - do,
+                "q_t": jnp.where(do & res_b, s["q_t"].at[b].set(tick),
+                                 s["q_t"])}
+
+    def evict_resident_hir(s):
+        in_q = s["q_t"] >= 0
+        has = jnp.any(in_q)
+        v = masked_argmin(s["q_t"], in_q)
+        return {**s,
+                "q_t": jnp.where(has, s["q_t"].at[v].set(-1), s["q_t"]),
+                "res": jnp.where(has, s["res"].at[v].set(False), s["res"]),
+                "n_res": s["n_res"] - has}
+
+    def step(s, key, now):
+        hit = s["res"][key]
+
+        def case_lir_hit(s):
+            return {**s, "s_t": s["s_t"].at[key].set(now + 1)}
+
+        def case_resident_hir(s):
+            ins = in_stack(s, key)
+            # promoted: HIR with stack recency -> LIR, leaves Q
+            sp = {**s,
+                  "s_t": s["s_t"].at[key].set(now + 1),
+                  "status": s["status"].at[key].set(_LIR),
+                  "n_lir": s["n_lir"] + 1,
+                  "q_t": s["q_t"].at[key].set(-1)}
+            sp = tree_where(sp["n_lir"] > llirs, demote_bottom(sp, now + 2),
+                            sp)
+            # not in stack: re-enter S, move to Q tail
+            sq = {**s,
+                  "s_t": s["s_t"].at[key].set(now + 1),
+                  "status": s["status"].at[key].set(_HIR),
+                  "q_t": s["q_t"].at[key].set(now + 2)}
+            return tree_where(ins, sp, sq)
+
+        def case_miss(s):
+            full1 = s["n_res"] >= capacity
+            s = tree_where(full1, evict_resident_hir(s), s)
+            # all-LIR corner: demote a LIR so Q has something to evict
+            full2 = full1 & (s["n_res"] >= capacity)
+            s = tree_where(full2,
+                           evict_resident_hir(demote_bottom(s, now)), s)
+            s = {**s, "res": s["res"].at[key].set(True),
+                 "n_res": s["n_res"] + 1}
+            ins = in_stack(s, key)       # after demotes moved the threshold
+            cold = (s["n_lir"] < llirs) & ~ins
+            # cold start: fill the LIR partition first
+            sc = {**s, "status": s["status"].at[key].set(_LIR),
+                  "n_lir": s["n_lir"] + 1,
+                  "s_t": s["s_t"].at[key].set(now + 1)}
+            # non-resident HIR ghost with recency -> promote to LIR
+            sp = {**s, "s_t": s["s_t"].at[key].set(now + 1),
+                  "status": s["status"].at[key].set(_LIR),
+                  "n_lir": s["n_lir"] + 1}
+            sp = tree_where(sp["n_lir"] > llirs, demote_bottom(sp, now + 2),
+                            sp)
+            # plain cold HIR: into S and Q
+            sq = {**s, "s_t": s["s_t"].at[key].set(now + 1),
+                  "status": s["status"].at[key].set(_HIR),
+                  "q_t": s["q_t"].at[key].set(now + 2)}
+            return tree_where(cold, sc, tree_where(ins, sp, sq))
+
+        case = jnp.where(s["status"][key] == _LIR, 0,
+                         jnp.where(s["res"][key], 1, 2))
+        s = jax.lax.switch(case, [case_lir_hit, case_resident_hir,
+                                  case_miss], s)
+        return s, hit
+
+    return state, step
+
+
+# --------------------------------------------------------------------------- #
+# registry                                                                    #
+# --------------------------------------------------------------------------- #
+
+def _simple_build(init, step_fn):
+    def build(capacity: int, n_keys: int):
+        return init(capacity, n_keys), step_fn
+    return build
+
+
+#: name -> build(capacity, n_keys) -> (initial_state, step)
+VEC_POLICIES: Dict[str, Callable] = {
+    "lru": _simple_build(lru_init, lru_step),
+    "fifo": _simple_build(fifo_init, fifo_step),
+    "2q": _simple_build(twoq_init, twoq_step),
+    "arc": arc_build,
+    "lirs": lirs_build,
+}
+
+#: stamp ticks consumed per access (worst case across policies + shadow)
+POLICY_TICKS = 4
+

@@ -11,8 +11,12 @@ freedom are replacement policy and relationship discovery — exactly the
 comparison the paper draws.
 
 A jitted array-based LRU fast path (``fast_lru_hit_rate``) backs the
-large cache-size sweeps; it is also the reference model for the TPU
-deployment of the simulator (state carried through ``lax.scan``).
+large cache-size sweeps; it was the seed of — and is now subsumed by —
+the vectorized batch engine (:mod:`repro.core.engine`), which carries
+every system's state through ``lax.scan`` and batches traces with
+``vmap``.  ``run_all_systems`` dispatches to the engine by default; the
+scalar loops in this module remain the cross-check oracle the engine is
+tested against bit-for-bit (DESIGN.md §4, tests/test_engine.py).
 """
 
 from __future__ import annotations
@@ -217,15 +221,45 @@ def simulate_pfcs(trace: Trace,
 def run_all_systems(trace: Trace,
                     capacities: Sequence[Tuple[str, int]] = DEFAULT_LEVELS,
                     systems: Sequence[str] = ("lru", "arc", "lirs", "semantic", "pfcs"),
-                    seed: int = 0) -> Dict[str, AccessStats]:
+                    seed: int = 0,
+                    engine: str = "auto") -> Dict[str, AccessStats]:
+    """Run every requested system over one trace.
+
+    ``engine`` selects the simulation backend:
+
+      * ``"auto"`` (default) — the vectorized array engine
+        (:mod:`repro.core.engine`, a ``lax.scan`` state machine per
+        system) for every system it supports; the scalar reference
+        loops otherwise.  The engine is bit-identical to the scalar
+        oracles (tests/test_engine.py), so results do not depend on the
+        backend — only wall-clock does.
+      * ``"vectorized"`` — require the engine; raise for systems it
+        cannot run (the semantic baseline consumes its noise RNG in
+        miss order, which is inherently serial).
+      * ``"scalar"`` — force the reference loops (the oracle path).
+    """
+    if engine not in ("auto", "vectorized", "scalar"):
+        raise ValueError(f"engine must be auto|vectorized|scalar, got {engine!r}")
     out: Dict[str, AccessStats] = {}
+    vec_systems: List[str] = []
     for s in systems:
+        if engine != "scalar":
+            from .engine import VECTORIZED_SYSTEMS
+            if s in VECTORIZED_SYSTEMS:
+                vec_systems.append(s)
+                continue
+            if engine == "vectorized":
+                raise ValueError(f"engine cannot simulate {s!r}")
         if s == "pfcs":
             out[s] = simulate_pfcs(trace, capacities)
         elif s == "semantic":
             out[s] = simulate_semantic(trace, capacities, seed=seed)
         else:
             out[s] = simulate_baseline(s, trace, capacities)
+    if vec_systems:
+        from .engine import simulate_trace as _vec_simulate
+        for s in vec_systems:
+            out[s] = _vec_simulate(trace, s, capacities)
     return out
 
 

@@ -17,6 +17,7 @@ from typing import List, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import enable_x64
 
 from .factorize import divisibility_mask_pallas, factorize_squarefree_pallas
 from .gcd import gcd_pallas
@@ -67,7 +68,7 @@ def factorize_batch(
     n, p = comp.shape[0], pool.shape[0]
     comp_p = _pad_to(comp.astype(dt), block_n, 1)
     pool_p = _pad_to(pool.astype(dt), block_p, 0)
-    with jax.enable_x64(True) if dt == np.int64 else _nullcontext():
+    with enable_x64(True) if dt == np.int64 else _nullcontext():
         mask, residual = factorize_squarefree_pallas(
             jnp.asarray(comp_p), jnp.asarray(pool_p),
             block_n=block_n, block_p=block_p, interpret=interpret)
@@ -99,7 +100,7 @@ def divisibility_scan(
     n, q = reg.shape[0], qs.shape[0]
     reg_p = _pad_to(reg.astype(dt), block_n, 1)
     qs_p = _pad_to(qs.astype(dt), block_p, 0)
-    with jax.enable_x64(True) if dt == np.int64 else _nullcontext():
+    with enable_x64(True) if dt == np.int64 else _nullcontext():
         mask = divisibility_mask_pallas(
             jnp.asarray(reg_p), jnp.asarray(qs_p),
             block_n=block_n, block_p=block_p, interpret=interpret)
@@ -125,7 +126,7 @@ def gcd_batch(
     n = aa.shape[0]
     ap = _pad_to(aa.astype(dt), block_n, 0)
     bp = _pad_to(bb.astype(dt), block_n, 0)
-    with jax.enable_x64(True) if dt == np.int64 else _nullcontext():
+    with enable_x64(True) if dt == np.int64 else _nullcontext():
         g = gcd_pallas(jnp.asarray(ap), jnp.asarray(bp),
                        block_n=block_n, interpret=interpret)
         g = np.asarray(g)[:n]

@@ -1,0 +1,151 @@
+"""Vectorized engine == scalar oracle, bit for bit.
+
+The engine (repro.core.engine) must reproduce ``simulate_baseline`` /
+``simulate_pfcs`` exactly — per-level hit counts, misses, and every
+prefetch counter — on every workload shape, plus hold its batching
+contract: a ``vmap``-batched run equals the per-trace runs, including
+ragged (padded) batches.  Discovery-table backends (host replay vs bulk
+Pallas kernels) must build identical tables.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (simulate_baseline, simulate_pfcs, db_join_trace,
+                        graph_walk_trace, run_all_systems, scan_trace,
+                        zipf_trace)
+from repro.core.engine import (pfcs_tables, related_bulk, simulate_batch,
+                               simulate_trace)
+from repro.core.engine.tables import make_pfcs_cache
+
+CAPS = (("L1", 8), ("L2", 24), ("L3", 64))
+T = 1200   # shared length -> slot-array policies share one compile
+
+
+def _traces():
+    return [
+        zipf_trace(n_keys=400, n_accesses=T, seed=1),
+        db_join_trace(n_orders=150, n_customers=40, n_items=80,
+                      n_queries=T, seed=2),
+        scan_trace(n_keys=T // 3, n_passes=3),     # adversarial recency
+    ]
+
+
+def _assert_same(a, b, *, prefetch=False):
+    assert a.hits_per_level == b.hits_per_level
+    assert a.misses == b.misses
+    assert a.demand_accesses == b.demand_accesses
+    assert a.hit_rate == b.hit_rate
+    if prefetch:
+        assert a.prefetches_issued == b.prefetches_issued
+        assert a.prefetches_used == b.prefetches_used
+        assert a.prefetches_true == b.prefetches_true
+
+
+@pytest.mark.parametrize("policy", ["lru", "fifo", "2q", "arc", "lirs"])
+def test_baseline_bit_equivalence(policy):
+    for tr in _traces():
+        a = simulate_baseline(policy, tr, CAPS)
+        b = simulate_trace(tr, policy, CAPS)
+        _assert_same(a, b)
+
+
+def test_pfcs_bit_equivalence():
+    for tr in [db_join_trace(n_orders=150, n_customers=40, n_items=80,
+                             n_queries=T, seed=3),
+               graph_walk_trace(n_keys=300, relationship_density=0.7,
+                                n_accesses=T, seed=4),
+               zipf_trace(n_keys=400, n_accesses=T, seed=5)]:
+        a = simulate_pfcs(tr, CAPS)
+        b = simulate_trace(tr, "pfcs", CAPS)
+        _assert_same(a, b, prefetch=True)
+        # the host discovery backend reproduces the oracle's
+        # factorization stage mix exactly as well
+        assert a.factor_ops == b.factor_ops
+
+
+def test_pfcs_variant_flags_equivalence():
+    """Non-default PFCS knobs flow through the engine identically."""
+    tr = graph_walk_trace(n_keys=300, relationship_density=0.5,
+                          n_accesses=T, seed=6)
+    for kw in (dict(prefetch_budget=2, victim_window=1),
+               dict(enable_prefetch=False),
+               dict(prefetch_trigger="always", prefetch_budget=8)):
+        a = simulate_pfcs(tr, CAPS, **kw)
+        b = simulate_trace(tr, "pfcs", CAPS, **kw)
+        _assert_same(a, b, prefetch=True)
+
+
+# --------------------------------------------------------------------------- #
+# batching                                                                    #
+# --------------------------------------------------------------------------- #
+
+def test_vmap_batch_matches_single():
+    trs = [zipf_trace(n_keys=400, n_accesses=T, seed=s) for s in range(3)]
+    for system in ("arc", "pfcs"):
+        batch = simulate_batch(trs, system, CAPS)
+        assert len(batch) == len(trs)
+        for tr, st_b in zip(trs, batch):
+            st_s = simulate_trace(tr, system, CAPS)
+            _assert_same(st_s, st_b, prefetch=(system == "pfcs"))
+
+
+def test_ragged_batch_pads_exactly():
+    """Shorter traces are padded with no-op steps, not truncated state."""
+    trs = [zipf_trace(n_keys=300, n_accesses=n, seed=s)
+           for s, n in ((0, 900), (1, 1200), (2, 500))]
+    batch = simulate_batch(trs, "lirs", CAPS)
+    for tr, st_b in zip(trs, batch):
+        assert st_b.demand_accesses == tr.length    # padding not counted
+        _assert_same(simulate_baseline("lirs", tr, CAPS), st_b)
+
+
+def test_engine_rejects_unknown_system():
+    tr = zipf_trace(n_keys=100, n_accesses=200, seed=0)
+    with pytest.raises(ValueError):
+        simulate_trace(tr, "semantic", CAPS)
+
+
+def test_run_all_systems_backend_agreement():
+    """run_all_systems dispatches to the engine by default and the
+    result is indistinguishable from the scalar backend."""
+    tr = db_join_trace(n_orders=150, n_customers=40, n_items=80,
+                       n_queries=T, seed=7)
+    auto = run_all_systems(tr, CAPS, systems=("lru", "pfcs"))
+    scal = run_all_systems(tr, CAPS, systems=("lru", "pfcs"),
+                           engine="scalar")
+    for s in ("lru", "pfcs"):
+        _assert_same(auto[s], scal[s], prefetch=(s == "pfcs"))
+    with pytest.raises(ValueError):
+        run_all_systems(tr, CAPS, systems=("semantic",), engine="vectorized")
+
+
+# --------------------------------------------------------------------------- #
+# discovery tables: host replay vs bulk Pallas kernels                        #
+# --------------------------------------------------------------------------- #
+
+def test_kernel_and_host_tables_agree():
+    tr = db_join_trace(n_orders=150, n_customers=40, n_items=80,
+                       n_queries=T, seed=8)
+    host = pfcs_tables(tr, CAPS, discover="host")
+    kern = pfcs_tables(tr, CAPS, discover="kernel")
+    np.testing.assert_array_equal(host.targets, kern.targets)
+    np.testing.assert_array_equal(host.truth, kern.truth)
+    np.testing.assert_array_equal(host.degree, kern.degree)
+    # and the simulated result is identical under either backend
+    a = simulate_trace(tr, "pfcs", CAPS, tables=host)
+    b = simulate_trace(tr, "pfcs", CAPS, tables=kern)
+    _assert_same(a, b, prefetch=True)
+
+
+def test_related_bulk_matches_prefetcher():
+    """The Pallas bulk-discovery path recovers exactly the related sets
+    the host prefetcher computes by per-prime factorization."""
+    tr = graph_walk_trace(n_keys=300, relationship_density=0.8,
+                          n_accesses=T, seed=9)
+    cache = make_pfcs_cache(tr, CAPS)
+    keys = sorted({int(k) for k in np.unique(tr.accesses)})
+    bulk = related_bulk(cache, keys)
+    for k in keys:
+        host = cache.prefetcher.related_elements(k)
+        assert bulk.get(k, []) == host, k

@@ -4,7 +4,8 @@ parallel == chunked == recurrent, MLA decode == MLA train."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_compat import given, settings, st
 
 import jax
 import jax.numpy as jnp

@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 import jax
+from jax.experimental import enable_x64 as _enable_x64
 import jax.numpy as jnp
 
 from repro.kernels.factorize import (divisibility_mask_pallas,
@@ -36,7 +37,7 @@ def test_factorize_kernel_matches_ref(n, p, bn, bp, dtype):
     pool = _pad(PRIMES_SMALL.astype(dtype), bp, 0)[:p]
     pairs = rng.choice(PRIMES_SMALL, size=(n, 2), replace=True)
     comps = (pairs[:, 0] * pairs[:, 1]).astype(dtype)
-    ctx = jax.enable_x64(True) if dtype == np.int64 else _null()
+    ctx = _enable_x64(True) if dtype == np.int64 else _null()
     with ctx:
         cj, pj = jnp.asarray(comps), jnp.asarray(pool)
         mask, res = factorize_squarefree_pallas(cj, pj, block_n=bn, block_p=bp)
@@ -51,7 +52,7 @@ def test_divmask_kernel_matches_ref(dtype):
     comps = _pad((rng.choice(PRIMES_SMALL, size=(300, 2)).prod(axis=1)
                   ).astype(dtype), 256, 1)
     qs = _pad(PRIMES_SMALL.astype(dtype), 512, 0)
-    ctx = jax.enable_x64(True) if dtype == np.int64 else _null()
+    ctx = _enable_x64(True) if dtype == np.int64 else _null()
     with ctx:
         cj, qj = jnp.asarray(comps), jnp.asarray(qs)
         mask = divisibility_mask_pallas(cj, qj)
@@ -66,7 +67,7 @@ def test_gcd_kernel_matches_ref(n, dtype):
     hi = 2**28 if dtype == np.int32 else 2**40
     a = rng.integers(1, hi, size=n).astype(dtype)
     b = rng.integers(1, hi, size=n).astype(dtype)
-    ctx = jax.enable_x64(True) if dtype == np.int64 else _null()
+    ctx = _enable_x64(True) if dtype == np.int64 else _null()
     with ctx:
         g = gcd_pallas(jnp.asarray(a), jnp.asarray(b))
         assert (np.asarray(g) == np.gcd(a, b)).all()

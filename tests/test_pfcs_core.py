@@ -3,7 +3,7 @@ Theorem 1 (zero false positives) as a machine-checked property."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import (CacheLevel, CompositeRegistry, Factorizer,
                         HierarchicalPrimeAllocator, PrimeAssigner,

@@ -3,7 +3,8 @@ LRU exactness vs brute force, Table-1-style system ordering."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.core import (DEFAULT_LEVELS, db_join_trace, derive_table1_row,
                         fast_lru_hit_rate, graph_walk_trace, make_policy,

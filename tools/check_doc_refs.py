@@ -1,0 +1,74 @@
+#!/usr/bin/env python
+"""Docs-consistency check: every documentation cross-reference resolves.
+
+Scans Python sources (docstrings + comments included — the whole file
+text) and the markdown tree for references to documentation files
+(``DESIGN.md``, ``README.md``, ``docs/api.md``, ``ROADMAP.md``, ...) and
+section anchors (``DESIGN.md §3``), then verifies:
+
+  1. every referenced file exists in the repository;
+  2. every ``DESIGN.md §N`` reference has a matching ``## §N`` heading.
+
+Run directly (CI: .github/workflows/ci.yml) or through
+``tests/test_docs.py``::
+
+    python tools/check_doc_refs.py          # exit 1 + report on failure
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import List
+
+# all-caps markdown names anywhere, or an explicit docs/*.md path
+FILE_REF = re.compile(r"\b(docs/[a-z_]+\.md|[A-Z][A-Z_]*\.md)\b")
+SECTION_REF = re.compile(r"\bDESIGN\.md\s+§(\d+)")
+SCAN_DIRS = ("src", "benchmarks", "tests", "examples", "tools", "docs")
+
+
+def _sources(root: Path):
+    for d in SCAN_DIRS:
+        yield from (root / d).rglob("*.py")
+        yield from (root / d).rglob("*.md")
+    yield from root.glob("*.md")
+
+
+def check(root: Path) -> List[str]:
+    """Returns a list of human-readable problems (empty == consistent)."""
+    problems: List[str] = []
+    design = root / "DESIGN.md"
+    design_text = design.read_text() if design.exists() else ""
+    sections = set(re.findall(r"^#+\s*§(\d+)", design_text, re.MULTILINE))
+    for path in sorted(set(_sources(root))):
+        if not path.exists():
+            continue
+        text = path.read_text(errors="replace")
+        rel = path.relative_to(root)
+        for ref in sorted(set(FILE_REF.findall(text))):
+            if ref == "CHANGES.md" and not (root / ref).exists():
+                continue   # changelog appears with the first PR
+            if not (root / ref).exists():
+                problems.append(f"{rel}: references missing file {ref}")
+        for sec in sorted(set(SECTION_REF.findall(text))):
+            if sec not in sections:
+                problems.append(
+                    f"{rel}: references DESIGN.md §{sec}, no such heading")
+    return problems
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parents[1]
+    problems = check(root)
+    if problems:
+        print(f"docs-consistency: {len(problems)} unresolved reference(s)")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    print("docs-consistency: all documentation cross-references resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
