@@ -3,7 +3,7 @@
 Emits ``name,us_per_call,derived`` CSV rows (stdout) plus human-readable
 tables; JSON artifacts land in ``artifacts/bench/``.
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--skip-roofline]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--smoke] [--skip-roofline]
 """
 
 from __future__ import annotations
@@ -17,6 +17,10 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale trial counts (slower)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-scale CI subset: Table 1 at reduced scale "
+                         "plus the serving load case (exercises the "
+                         "serving hot path on every PR)")
     ap.add_argument("--skip-roofline", action="store_true",
                     help="skip the dry-run-artifact roofline table")
     ap.add_argument("--scale", type=float, default=1.0,
@@ -28,6 +32,12 @@ def main(argv=None) -> None:
     print("name,us_per_call,derived")
 
     from . import table1, fig2, cases, kernel_bench
+
+    if args.smoke:
+        table1.run(n_trials=1, trace_scale=0.2)
+        cases.case_serving(smoke=True)
+        print(f"\ntotal benchmark wall time: {time.time() - t0:.1f}s")
+        return
 
     table1.run(n_trials=20 if args.full else 4, trace_scale=args.scale)
     fig2.run_fig2a(trace_scale=args.scale)

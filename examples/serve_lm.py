@@ -1,5 +1,10 @@
 """Serve a small model with batched requests through the continuous-
-batching engine + PFCS paged KV cache (prefix sharing, page prefetch).
+batching engine + the vectorized PFCS paged KV cache (prefix sharing,
+table-driven page prefetch).
+
+Two passes: a real smoke-scale model at small batch, then the
+null-model load-generator mode at 128 concurrent slots — the serving
+hot path the load benchmark (`benchmarks.cases.case_serving`) measures.
 
     PYTHONPATH=src python examples/serve_lm.py
 """
@@ -12,4 +17,7 @@ if __name__ == "__main__":
     serve_main(["--arch", "qwen2.5-3b", "--requests", "12",
                 "--max-new", "16", "--max-batch", "4", "--max-seq", "192",
                 "--shared-prefix", "32"])
+    serve_main(["--null-model", "--kv", "vec", "--max-batch", "128",
+                "--requests", "256", "--max-new", "16",
+                "--shared-prefix", "64"])
     sys.exit(0)

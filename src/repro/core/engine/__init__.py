@@ -36,12 +36,15 @@ Public entry points (documented with runnable examples in docs/api.md):
   * :func:`sweep`           — systems x capacity configs x traces
   * :func:`pfcs_tables`     — precomputed PFCS discovery tables
   * :func:`related_bulk`    — bulk Pallas-kernel relationship discovery
+  * :func:`successor_table` — bulk chain-successor discovery (the serving
+    paged-KV cache's table-refresh path, DESIGN.md §5)
 """
 
 from .batch import VECTORIZED_SYSTEMS, simulate_batch, simulate_trace, sweep
-from .tables import PFCSTables, pfcs_tables, related_bulk
+from .tables import (PFCSTables, pfcs_tables, related_bulk,
+                     successor_table)
 
 __all__ = [
     "simulate_trace", "simulate_batch", "sweep", "VECTORIZED_SYSTEMS",
-    "PFCSTables", "pfcs_tables", "related_bulk",
+    "PFCSTables", "pfcs_tables", "related_bulk", "successor_table",
 ]

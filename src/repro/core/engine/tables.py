@@ -39,7 +39,8 @@ import numpy as np
 from ..pfcs_cache import PFCSCache
 from ..traces import Trace
 
-__all__ = ["PFCSTables", "pfcs_tables", "related_bulk", "make_pfcs_cache"]
+__all__ = ["PFCSTables", "pfcs_tables", "related_bulk", "make_pfcs_cache",
+           "successor_table"]
 
 
 class PFCSTables(NamedTuple):
@@ -134,6 +135,96 @@ def related_bulk(cache: PFCSCache, keys: Sequence[int],
                 if tgt is not None:
                     ranked[tgt] = max(ranked.get(tgt, 0.0), rel.weight)
         out[k] = sorted(ranked.items(), key=lambda kv: -kv[1])
+    return out
+
+
+def successor_table(registry, assigner, data_ids: Sequence[int],
+                    discover: str = "host",
+                    chunk: int = 1024) -> Dict[int, List[int]]:
+    """Bulk successor-discovery table for chain-style registries.
+
+    The serving paged-KV cache's prefetch loop
+    (``repro.serving.kv_cache.PagedKVCache._prefetch_successors``)
+    walks, per touched page, every relationship containing the page's
+    prime and collects the *other* members as prefetch candidates.  The
+    candidate ORDER is the oracle's exact iteration order — composite
+    registry (registration) order, deduplicated by relationship, then
+    ``rel.primes`` iteration — and the list is deliberately NOT
+    deduplicated by target: the dynamic residency check at touch time
+    is what skips repeats, so repeats must survive into the table.
+
+    Two backends build the SAME table:
+
+      * ``discover="host"``   — replays ``registry.containing`` per id
+        (charging the host factorizer exactly as the scalar cache does);
+      * ``discover="kernel"`` — one bulk pass through the Pallas
+        ``divisibility_scan`` / ``factorize_batch`` kernels, the TPU
+        registry-refresh deployment (mirrors :func:`related_bulk`).
+
+    Returns ``{data_id: [successor data_id, ...]}`` for every id that
+    has an assigned prime (ids without one discover nothing — exactly
+    the oracle's early return).
+    """
+    keyed = [(int(d), p) for d in data_ids
+             if (p := assigner.prime_of(int(d))) is not None]
+    if discover == "host":
+        out: Dict[int, List[int]] = {}
+        for d, p in keyed:
+            row: List[int] = []
+            for rel in registry.containing(p):
+                for q in rel.primes:
+                    if q == p:
+                        continue
+                    succ = assigner.data_of(q)
+                    if succ is not None:
+                        row.append(succ)
+            out[d] = row
+        return out
+    if discover != "kernel":
+        raise ValueError(f"discover must be 'host' or 'kernel', "
+                         f"got {discover!r}")
+
+    from repro.kernels.ops import divisibility_scan, factorize_batch
+
+    arr = registry.composites_array()
+    if arr.size == 0 or not keyed:
+        return {d: [] for d, _ in keyed}
+
+    # kernel pass 1: registry divisibility scan, chunked over query primes
+    primes = np.asarray([p for _, p in keyed], dtype=np.int64)
+    cand: List[np.ndarray] = []
+    for lo in range(0, len(primes), chunk):
+        cand.extend(divisibility_scan(arr, primes[lo:lo + chunk]))
+
+    # kernel pass 2: decode every candidate composite once (Theorem 1
+    # check: the decoded factors must contain the query prime)
+    needed = sorted({int(i) for idxs in cand for i in idxs})
+    factors_of: Dict[int, set] = {}
+    if needed:
+        comps = arr[np.asarray(needed)]
+        facs, residual = factorize_batch(comps, registry.primes_array())
+        assert np.all(residual == 1), "registry composite escaped its pool"
+        for c, fs in zip(comps, facs):
+            factors_of[int(c)] = set(fs)
+
+    out = {}
+    for (d, p), idxs in zip(keyed, cand):
+        row = []
+        seen: set = set()
+        for i in idxs:                        # ascending == registry order
+            c = int(arr[int(i)])
+            assert p in factors_of[c], "divisibility hit must contain p"
+            rel = registry.relationship_of_composite(c)
+            if rel is None or rel.rel_id in seen:
+                continue
+            seen.add(rel.rel_id)
+            for q in rel.primes:              # oracle's frozenset order
+                if q == p:
+                    continue
+                succ = assigner.data_of(q)
+                if succ is not None:
+                    row.append(succ)
+        out[d] = row
     return out
 
 

@@ -1,11 +1,18 @@
 """Serving launcher: batched-request engine driver.
 
-Runs the continuous-batching engine against a smoke-scale model with the
-PFCS paged KV cache, printing throughput/latency and page-tier stats.
+Runs the continuous-batching engine against a smoke-scale model with
+the PFCS paged KV cache (``--kv vec`` array-state tables by default,
+``--kv scalar`` for the oracle), printing throughput/latency and
+page-tier stats.  ``--null-model`` drops the device decode entirely and
+drives the engine as a pure page-management load generator — the mode
+that scales to hundreds of concurrent slots (see
+``benchmarks.cases.case_serving`` for the measured load benchmark).
 
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
         --requests 16 --max-new 24
+    PYTHONPATH=src python -m repro.launch.serve --null-model \
+        --max-batch 128 --requests 256
 """
 
 from __future__ import annotations
@@ -14,7 +21,6 @@ import argparse
 import json
 import time
 
-import jax
 import numpy as np
 
 
@@ -29,23 +35,35 @@ def main(argv=None):
     ap.add_argument("--shared-prefix", type=int, default=24,
                     help="tokens of shared prompt prefix (exercises PFCS "
                          "prefix sharing)")
+    ap.add_argument("--kv", choices=("vec", "scalar"), default="vec",
+                    help="paged-KV backend: array-state tables (vec) or "
+                         "the scalar oracle")
+    ap.add_argument("--null-model", action="store_true",
+                    help="no device decode: pure page-management load "
+                         "generation (scales to hundreds of slots)")
     args = ap.parse_args(argv)
 
-    from repro.configs import get_smoke
-    from repro.models import build_model
     from repro.serving.engine import ServingEngine
 
-    cfg = get_smoke(args.arch)
-    model = build_model(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
+    if args.null_model:
+        model, params, vocab = None, None, 32_000
+    else:
+        import jax
+
+        from repro.configs import get_smoke
+        from repro.models import build_model
+
+        cfg = get_smoke(args.arch)
+        model = build_model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        vocab = cfg.vocab_size
     engine = ServingEngine(model, params, max_batch=args.max_batch,
-                           max_seq=args.max_seq)
+                           max_seq=args.max_seq, kv=args.kv)
 
     rng = np.random.default_rng(0)
-    shared = list(rng.integers(0, cfg.vocab_size, size=args.shared_prefix))
+    shared = list(rng.integers(0, vocab, size=args.shared_prefix))
     for _ in range(args.requests):
-        tail = list(rng.integers(0, cfg.vocab_size,
-                                 size=int(rng.integers(4, 12))))
+        tail = list(rng.integers(0, vocab, size=int(rng.integers(4, 12))))
         engine.submit(shared + tail, max_new_tokens=args.max_new)
 
     t0 = time.time()
@@ -55,14 +73,17 @@ def main(argv=None):
     st = engine.pages.stats
     ttfts = [r.first_token_t - r.submit_t for r in done if r.first_token_t]
     out = {
+        "kv": args.kv,
         "completed": len(done),
         "decode_tokens": toks,
         "tok_per_s": round(toks / wall, 1),
         "mean_ttft_s": round(float(np.mean(ttfts)), 3) if ttfts else None,
+        "peak_concurrency": engine.peak_live,
         "hbm_hit_rate": round(st.hbm_hit_rate, 4),
         "prefetches": st.prefetches,
         "prefetch_hits": st.prefetch_hits,
         "shared_prefix_pages": st.shared_prefix_pages,
+        "registry_scans": st.registry_scans,
     }
     print(json.dumps(out, indent=1))
     # deterministic shared-prefix discovery demo

@@ -1,0 +1,35 @@
+"""Serving tier: PFCS page/expert management for the decode hot path.
+
+The paper's technique as a first-class serving feature: KV pages and
+MoE expert weights are data elements, chains and co-activation groups
+are composites, and placement (HBM vs host) is driven by deterministic
+factorization-based discovery — zero false-positive prefetch traffic
+(Theorem 1), exactly where statistical prefetchers waste bandwidth.
+
+Public entry points (documented with runnable examples in docs/api.md):
+
+  * :class:`PagedKVCache`           — scalar paged-KV page manager (the
+    bit-exact oracle; per-page §4.2 scans)
+  * :class:`VectorizedPagedKVCache` — array-state page tables + bulk
+    table-driven chain discovery (DESIGN.md §5, the serving hot path)
+  * :class:`ServingEngine`          — continuous-batching engine over
+    either cache; :meth:`ServingEngine.submit` /
+    :meth:`ServingEngine.step` drive the request lifecycle
+  * :class:`ExpertCache`            — MoE expert-weight cache with
+    co-activation prefetch
+
+The vectorized cache must reproduce the oracle's ``PageStats`` counters
+bit-for-bit (``tests/test_serving.py``), mirroring the engine-vs-oracle
+discipline of ``tests/test_engine.py``.
+"""
+
+from .engine import Request, ServingEngine
+from .expert_cache import ExpertCache, ExpertCacheStats
+from .kv_cache import PARITY_COUNTERS, PagedKVCache, PageStats
+from .kv_cache_vec import VectorizedPagedKVCache
+
+__all__ = [
+    "Request", "ServingEngine", "ExpertCache", "ExpertCacheStats",
+    "PagedKVCache", "PageStats", "PARITY_COUNTERS",
+    "VectorizedPagedKVCache",
+]

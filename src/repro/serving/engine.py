@@ -3,29 +3,46 @@
 Request lifecycle: submit -> (queued) -> prefill -> decode slots ->
 complete.  The engine keeps a fixed decode batch; finished slots are
 refilled from the queue every step (continuous batching, vLLM-style).
-The PagedKVCache decides page placement; each decode step first touches
-the pages the batch will read — PFCS prefetch means the successor pages
-of every active chain are already HBM-resident with zero false-positive
-traffic.
+The paged KV cache decides page placement; each decode step first
+touches the pages the batch will read — PFCS prefetch means the
+successor pages of every active chain are already HBM-resident with
+zero false-positive traffic.
 
-On-device compute is the model's ``prefill`` / ``decode_step``; the
-engine is model-agnostic (any arch from the zoo) and is exercised
-end-to-end by ``examples/serve_lm.py`` with a smoke-sized model.
+Two cache backends (``kv=``):
+
+  * ``"vec"`` (default) — :class:`~repro.serving.kv_cache_vec.
+    VectorizedPagedKVCache`: array page tables + table-driven bulk
+    discovery.  The whole decode batch's demand+prefetch set is one
+    ``touch_batch`` call — no per-page registry scans — which is what
+    lets one engine tick drive hundreds of concurrent requests
+    (DESIGN.md §5).
+  * ``"scalar"`` — the oracle :class:`~repro.serving.kv_cache.
+    PagedKVCache`; bit-exact same counters, one §4.2 scan per page.
+
+On-device compute is the model's ``prefill`` / ``decode_step``; pass
+``model=None`` to run the engine as a pure page-management load
+generator (deterministic stub tokens) — the mode the serving benchmark
+(``benchmarks.cases.case_serving``) uses to drive 100+ concurrent
+requests per step.  With a model, the engine is model-agnostic (any
+arch from the zoo) and is exercised end-to-end by
+``examples/serve_lm.py`` with a smoke-sized model.
 """
 
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from .kv_cache import PagedKVCache
+from .kv_cache_vec import VectorizedPagedKVCache
 
 __all__ = ["Request", "ServingEngine"]
+
+#: stub-decode vocabulary (model=None load-generator mode)
+_STUB_VOCAB = 32_000
 
 
 @dataclass
@@ -41,20 +58,41 @@ class Request:
 
 
 class ServingEngine:
-    def __init__(self, model, params, max_batch: int = 8,
+    def __init__(self, model=None, params=None, max_batch: int = 8,
                  max_seq: int = 512, page_size: int = 16,
-                 hbm_pages: int = 256, greedy: bool = True):
+                 hbm_pages: int = 256, greedy: bool = True,
+                 kv: str = "vec", prefetch_budget: int = 4,
+                 reread_window: int = 1):
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
-        self.pages = PagedKVCache(hbm_pages=hbm_pages, page_size=page_size)
+        if kv == "vec":
+            self.pages: PagedKVCache = VectorizedPagedKVCache(
+                hbm_pages=hbm_pages, page_size=page_size,
+                prefetch_budget=prefetch_budget)
+        elif kv == "scalar":
+            self.pages = PagedKVCache(hbm_pages=hbm_pages,
+                                      page_size=page_size,
+                                      prefetch_budget=prefetch_budget)
+        else:
+            raise ValueError(f"kv must be 'vec' or 'scalar', got {kv!r}")
         self.queue: List[Request] = []
         self.slots: List[Optional[Request]] = [None] * max_batch
-        self.cache = model.init_cache(max_batch, max_seq)
-        self._decode = jax.jit(model.decode_step)
+        if model is not None:
+            import jax
+            self.cache = model.init_cache(max_batch, max_seq)
+            self._decode = jax.jit(model.decode_step)
+        else:                       # page-management load-generator mode
+            self.cache = None
+            self._decode = None
         self._next_id = 0
         self.steps = 0
+        self.peak_live = 0          # max concurrent requests in one step
+        # pages of KV context each decode step demand-reads per request:
+        # the last `reread_window` pages of the chain, oldest first (paged
+        # attention touches the recent context window; 1 = tail only)
+        self.reread_window = max(1, int(reread_window))
 
     # ------------------------------------------------------------------ #
 
@@ -74,6 +112,8 @@ class ServingEngine:
             req.state = "running"
             self.slots[i] = req
             self.pages.register_request(req.req_id, req.prompt)
+            if self.model is None:
+                continue            # stub mode: no device KV to prefill
             # prefill this slot: feed prompt tokens through decode steps
             # (single-slot prefill keeps the engine simple; a production
             # path would batch prefills separately — Sarathi-style chunked
@@ -83,6 +123,7 @@ class ServingEngine:
 
     def _step_slot(self, i: int, token: int) -> int:
         """Advance slot i by one token; returns the argmax next token."""
+        import jax.numpy as jnp
         b = self.max_batch
         toks = np.zeros((b, 1), np.int32)
         toks[i, 0] = token
@@ -97,30 +138,51 @@ class ServingEngine:
         self.cache = dict(self.cache, len=jnp.asarray(ln))
         return int(np.argmax(np.asarray(logits)[i, -1]))
 
+    def _stub_token(self, req: Request) -> int:
+        """Deterministic pseudo-decode for model=None mode (independent
+        of cache state, so vec/scalar engine runs stay comparable)."""
+        return (req.req_id * 7919 + len(req.generated) * 104_729) % _STUB_VOCAB
+
     def step(self) -> Dict[str, Any]:
-        """One engine tick: admit, decode one token for every live slot."""
+        """One engine tick: admit, decode one token for every live slot.
+
+        Page placement for the WHOLE batch is a single ``touch_batch``
+        call — with the vectorized cache that means bulk table-driven
+        discovery; with the scalar oracle it degenerates to the per-page
+        scan loop.
+        """
         self._admit()
         live = [(i, r) for i, r in enumerate(self.slots) if r is not None]
         if not live:
             return {"live": 0}
-        b = self.max_batch
-        toks = np.zeros((b, 1), np.int32)
-        for i, req in live:
-            last = (req.generated[-1] if req.generated else
-                    (req.prompt[-1] if req.prompt else 0))
-            toks[i, 0] = last
-            # touch the page the decode reads (tail of the chain)
-            chain = self.pages.chains.get(req.req_id)
-            if chain:
-                self.pages.touch(req.req_id, len(chain) - 1)
-        logits, self.cache = self._decode(self.params,
-                                          {"tokens": jnp.asarray(toks)},
-                                          self.cache)
-        lg = np.asarray(logits)
+        self.peak_live = max(self.peak_live, len(live))
+        # touch the pages each live slot's decode reads (the last
+        # reread_window pages of its chain, oldest first)
+        touches = [(r.req_id, j)
+                   for _, r in live
+                   if (n := len(self.pages.chains.get(r.req_id) or ()))
+                   for j in range(max(0, n - self.reread_window), n)]
+        if touches:
+            self.pages.touch_batch(touches)
+
+        if self.model is not None:
+            import jax.numpy as jnp
+            b = self.max_batch
+            toks = np.zeros((b, 1), np.int32)
+            for i, req in live:
+                toks[i, 0] = (req.generated[-1] if req.generated else
+                              (req.prompt[-1] if req.prompt else 0))
+            logits, self.cache = self._decode(self.params,
+                                              {"tokens": jnp.asarray(toks)},
+                                              self.cache)
+            lg = np.asarray(logits)
+            nxt_of = {i: int(np.argmax(lg[i, -1])) for i, _ in live}
+        else:
+            nxt_of = {i: self._stub_token(r) for i, r in live}
+
         now = time.monotonic()
         for i, req in live:
-            nxt = int(np.argmax(lg[i, -1]))
-            req.generated.append(nxt)
+            req.generated.append(nxt_of[i])
             if req.first_token_t is None:
                 req.first_token_t = now
             if len(req.generated) >= req.max_new_tokens:

@@ -29,11 +29,19 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from repro.core.assignment import PrimeAssigner
-from repro.core.composite import CompositeRegistry
+from repro.core.composite import CompositeRegistry, encode_relationship
 from repro.core.factorization import Factorizer
 from repro.core.primes import CacheLevel, HierarchicalPrimeAllocator
 
-__all__ = ["PagedKVCache", "PageStats"]
+__all__ = ["PagedKVCache", "PageStats", "PARITY_COUNTERS"]
+
+
+#: the counters both cache implementations must agree on bit-for-bit
+#: (tests/test_serving.py parity suite); ``registry_scans`` is excluded —
+#: it counts *discovery work* and differs by design between the scalar
+#: per-touch scan and the vectorized table-driven path.
+PARITY_COUNTERS = ("hbm_hits", "host_hits", "misses", "prefetches",
+                   "prefetch_hits", "evictions", "shared_prefix_pages")
 
 
 @dataclass
@@ -45,11 +53,20 @@ class PageStats:
     prefetch_hits: int = 0      # demanded while still resident from prefetch
     evictions: int = 0
     shared_prefix_pages: int = 0
+    registry_scans: int = 0     # per-page §4.2 divisibility scans performed
 
     @property
     def hbm_hit_rate(self) -> float:
         total = self.hbm_hits + self.host_hits + self.misses
         return self.hbm_hits / max(1, total)
+
+    @property
+    def prefetch_hit_rate(self) -> float:
+        return self.prefetch_hits / max(1, self.prefetches)
+
+    def parity_tuple(self) -> Tuple[int, ...]:
+        """The counters the vectorized cache must reproduce exactly."""
+        return tuple(getattr(self, f) for f in PARITY_COUNTERS)
 
 
 class PagedKVCache:
@@ -57,6 +74,15 @@ class PagedKVCache:
 
     def __init__(self, hbm_pages: int = 1024, page_size: int = 16,
                  prefetch_budget: int = 4):
+        self._init_identity(hbm_pages, page_size, prefetch_budget)
+        self.hbm: "OrderedDict[int, bool]" = OrderedDict()  # page -> prefetched
+        self.host: Set[int] = set()
+
+    def _init_identity(self, hbm_pages: int, page_size: int,
+                       prefetch_budget: int) -> None:
+        """Page identity, prime assignment, and chain state — shared with
+        the array-state implementation (``kv_cache_vec``), which replaces
+        only the *placement* structures above."""
         self.page_size = page_size
         self.hbm_capacity = hbm_pages
         self.prefetch_budget = prefetch_budget
@@ -64,8 +90,6 @@ class PagedKVCache:
         self.registry = CompositeRegistry(self.factorizer)
         self.assigner = PrimeAssigner(HierarchicalPrimeAllocator(),
                                       self.registry)
-        self.hbm: "OrderedDict[int, bool]" = OrderedDict()  # page -> prefetched
-        self.host: Set[int] = set()
         self.chains: Dict[int, List[int]] = {}              # request -> pages
         self._content: Dict[int, int] = {}   # content hash -> page id (prefix share)
         self._next_page = 0
@@ -98,12 +122,32 @@ class PagedKVCache:
             pid, _ = self._page_for_tokens(prefix)
             pages.append(pid)
         self.chains[req_id] = pages
-        # chain relationships: consecutive page pairs (successor edges)
+        self._register_chain_edges(pages)
+        return pages
+
+    def _register_chain_edges(self, pages: Sequence[int]
+                              ) -> List[Tuple[int, int]]:
+        """Register consecutive page pairs (successor edges) as chain
+        composites; returns the pairs whose composite is NEW to the
+        registry, in registration order.  A pair whose composite is
+        already live is skipped outright: re-registering would leave
+        the §4.2 scan's discoveries unchanged (the registry keys
+        relationships by composite value) while orphaning the old
+        ``Relationship``, inflating prime degrees, and bumping the
+        registry version — which would force the vectorized cache into
+        needless table rebuilds.  The vectorized cache maintains its
+        successor table incrementally from exactly the returned list."""
+        edges: List[Tuple[int, int]] = []
         for a, b in zip(pages, pages[1:]):
             pa, pb = self.assigner.prime_of(a), self.assigner.prime_of(b)
             if pa is not None and pb is not None and pa != pb:
-                self.registry.register({pa, pb}, kind="chain")
-        return pages
+                fresh = any(
+                    self.registry.relationship_of_composite(c) is None
+                    for c in encode_relationship(sorted((pa, pb))))
+                if fresh:
+                    self.registry.register({pa, pb}, kind="chain")
+                    edges.append((a, b))
+        return edges
 
     # ------------------------------------------------------------------ #
     # placement                                                            #
@@ -145,12 +189,24 @@ class PagedKVCache:
         self._prefetch_successors(pid)
         return tier
 
+    def touch_batch(self, items: Sequence[Tuple[int, int]]) -> List[str]:
+        """Demand-access a whole decode batch: ``items`` is a sequence of
+        ``(req_id, page_idx)`` pairs, processed in order.  The scalar
+        implementation simply loops ``touch`` (one §4.2 registry scan per
+        page); the vectorized cache overrides this with table-driven bulk
+        discovery — the serving engine always goes through this entry
+        point."""
+        return [self.touch(r, i) for r, i in items]
+
     def _prefetch_successors(self, pid: int) -> None:
         """§4.2 scan: chains through pid -> prefetch successor pages."""
         p = self.assigner.prime_of(pid)
         if p is None:
             return
         budget = self.prefetch_budget
+        if budget <= 0:
+            return
+        self.stats.registry_scans += 1
         for rel in self.registry.containing(p):
             for q in rel.primes:
                 if q == p:
