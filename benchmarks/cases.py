@@ -94,7 +94,7 @@ def case_hft(seed: int = 0):
     return out
 
 
-def case_serving(smoke: bool = False):
+def case_serving(smoke: bool = False, shards=None):
     """Serving-layer load benchmark: continuous batching over the paged
     KV cache.
 
@@ -109,11 +109,21 @@ def case_serving(smoke: bool = False):
         per touched page) — bit-exact same placement, so the wall-clock
         delta isolates the discovery/representation cost;
       * ``lru``         — prefetch disabled: plain LRU paging, the
-        baseline a statistical-prefetch-free server would run.
+        baseline a statistical-prefetch-free server would run;
+
+    plus a ``--shards`` sweep of ``pfcs_shard{N}`` configurations —
+    the mesh-partitioned :class:`~repro.serving.kv_cache_sharded.
+    ShardedPagedKVCache` (DESIGN.md §6) at N shards each (default sweep
+    1/2/4; smoke runs 2 only).  Sharded runs use ``shard_map`` when the
+    host exposes >= N devices (CI forces a 2-device CPU mesh via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=2``) and the
+    bit-identical host loop otherwise; either way their counters must
+    match the scalar oracle exactly.
 
     Reports throughput, mean TTFT, HBM hit rate, prefetch hit rate, and
-    peak per-step concurrency; asserts counter parity between the vec
-    and scalar runs and (non-smoke) >= 100 concurrent requests/step.
+    peak per-step concurrency; asserts counter parity between the vec /
+    sharded and scalar runs and (non-smoke) >= 100 concurrent
+    requests/step.
     """
     from repro.serving.engine import ServingEngine
 
@@ -126,15 +136,17 @@ def case_serving(smoke: bool = False):
     if smoke:
         n_req, max_batch, max_new = 48, 16, 8
         hbm, shared_tok, window = 24, 64, 2
+        shard_sweep = (2,) if shards is None else tuple(shards)
     else:
         n_req, max_batch, max_new = 256, 128, 32
         hbm, shared_tok, window = 384, 128, 4
+        shard_sweep = (1, 2, 4) if shards is None else tuple(shards)
 
-    def run(kv: str, budget: int):
+    def run(kv: str, budget: int, n_shards: int = 1):
         rng = np.random.default_rng(0)
         eng = ServingEngine(None, None, max_batch=max_batch, page_size=16,
                             hbm_pages=hbm, kv=kv, prefetch_budget=budget,
-                            reread_window=window)
+                            reread_window=window, shards=n_shards)
         groups = [list(rng.integers(0, 30_000, size=shared_tok))
                   for _ in range(max(1, n_req // 8))]
         for r in range(n_req):
@@ -149,7 +161,7 @@ def case_serving(smoke: bool = False):
         ttfts = [r.first_token_t - r.submit_t for r in done
                  if r.first_token_t is not None]
         st = eng.pages.stats
-        return dict(
+        out = dict(
             completed=len(done), wall_s=wall,
             tok_per_s=toks / max(wall, 1e-9),
             req_per_s=len(done) / max(wall, 1e-9),
@@ -161,17 +173,39 @@ def case_serving(smoke: bool = False):
             bulk_refreshes=getattr(eng.pages, "bulk_refreshes", None),
             parity=st.parity_tuple(),
         )
+        if kv == "sharded":
+            scan = eng.pages.last_scan
+            out.update(
+                shards=n_shards, used_shard_map=scan.used_shard_map,
+                local_composites=list(scan.local_composites),
+                cross_composites=scan.cross_composites,
+                queries_per_shard=list(scan.queries_per_shard),
+                shard_load=eng.pages.shard_load(),
+                shard_agg_parity=eng.pages.aggregate_shard_stats()
+                                    .parity_tuple(),
+            )
+        return out
 
     res = {"pfcs_vec": run("vec", 4),
            "pfcs_scalar": run("scalar", 4),
            "lru": run("vec", 0)}
+    for n in shard_sweep:
+        res[f"pfcs_shard{n}"] = run("sharded", 4, n_shards=n)
 
-    # the vectorized cache is an implementation, not an estimator: its
-    # counters must match the scalar oracle exactly
+    # the vectorized / sharded caches are implementations, not
+    # estimators: their counters must match the scalar oracle exactly
     assert res["pfcs_vec"]["parity"] == res["pfcs_scalar"]["parity"], \
         "vectorized serving cache diverged from the scalar oracle"
     assert res["pfcs_vec"]["registry_scans"] == 0, \
         "vectorized touch path performed a per-page registry scan"
+    for n in shard_sweep:
+        r = res[f"pfcs_shard{n}"]
+        assert r["parity"] == res["pfcs_scalar"]["parity"], \
+            f"sharded cache ({n} shards) diverged from the scalar oracle"
+        assert r["shard_agg_parity"] == r["parity"], \
+            f"per-shard stats ({n} shards) do not aggregate to the total"
+        assert r["registry_scans"] == 0, \
+            "sharded touch path performed a per-page registry scan"
     if not smoke:
         assert res["pfcs_vec"]["peak_concurrency"] >= 100, \
             "load benchmark must sustain >= 100 concurrent requests/step"
@@ -192,6 +226,18 @@ def case_serving(smoke: bool = False):
           f"PFCS vs LRU hbm hit: "
           f"{res['pfcs_vec']['hbm_hit_rate']*100:.1f}% vs "
           f"{res['lru']['hbm_hit_rate']*100:.1f}%")
+    for n in shard_sweep:
+        r = res[f"pfcs_shard{n}"]
+        peak_local = max(r["local_composites"]) if r["local_composites"] \
+            else 0
+        print(f"  shard{n}: shard_map={r['used_shard_map']} "
+              f"per-shard local composites={r['local_composites']} "
+              f"cross={r['cross_composites']} "
+              f"(peak scan slice {peak_local} of "
+              f"{sum(r['local_composites']) + r['cross_composites']})")
+        emit(f"case_serving.shard{n}_tok_per_s", r["tok_per_s"])
+        emit(f"case_serving.shard{n}_cross_composites",
+             r["cross_composites"])
     emit("case_serving.vec_tok_per_s", res["pfcs_vec"]["tok_per_s"])
     emit("case_serving.vec_mean_ttft_ms",
          res["pfcs_vec"]["mean_ttft_s"] * 1e3)
@@ -199,7 +245,8 @@ def case_serving(smoke: bool = False):
          res["pfcs_vec"]["hbm_hit_rate"] * 100)
     emit("case_serving.vec_vs_scalar_speedup", speedup)
     emit("case_serving.lru_hbm_hit_pct", res["lru"]["hbm_hit_rate"] * 100)
-    out = {k: {kk: vv for kk, vv in v.items() if kk != "parity"}
+    out = {k: {kk: vv for kk, vv in v.items()
+               if kk not in ("parity", "shard_agg_parity")}
            for k, v in res.items()}
     out["vec_vs_scalar_speedup"] = speedup
     save_json("case_serving", out)

@@ -26,7 +26,14 @@ def main(argv=None) -> None:
     ap.add_argument("--scale", type=float, default=1.0,
                     help="trace-length multiplier for table1/fig2 "
                          "(the vectorized engine handles >=10x)")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="run case_serving's sharded-cache config at "
+                         "exactly N shards (default: sweep 1/2/4, smoke "
+                         "2); uses shard_map when the host exposes >= N "
+                         "devices (XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N), host loop otherwise")
     args = ap.parse_args(argv)
+    shards = (args.shards,) if args.shards else None
 
     t0 = time.time()
     print("name,us_per_call,derived")
@@ -35,7 +42,7 @@ def main(argv=None) -> None:
 
     if args.smoke:
         table1.run(n_trials=1, trace_scale=0.2)
-        cases.case_serving(smoke=True)
+        cases.case_serving(smoke=True, shards=shards)
         print(f"\ntotal benchmark wall time: {time.time() - t0:.1f}s")
         return
 
@@ -45,7 +52,7 @@ def main(argv=None) -> None:
     cases.case_db()
     cases.case_ml()
     cases.case_hft()
-    cases.case_serving()
+    cases.case_serving(shards=shards)
     kernel_bench.run()
 
     if not args.skip_roofline:

@@ -38,13 +38,20 @@ Public entry points (documented with runnable examples in docs/api.md):
   * :func:`related_bulk`    — bulk Pallas-kernel relationship discovery
   * :func:`successor_table` — bulk chain-successor discovery (the serving
     paged-KV cache's table-refresh path, DESIGN.md §5)
+  * :func:`sharded_successor_table` — the mesh-partitioned twin:
+    per-shard Pallas scans under ``shard_map`` + the cross-shard gcd
+    exchange, bit-identical rows (DESIGN.md §6), with
+    :class:`PrimeSpacePartition` as the ownership rule
 """
 
 from .batch import VECTORIZED_SYSTEMS, simulate_batch, simulate_trace, sweep
+from .shard import (PrimeSpacePartition, shard_mesh,
+                    sharded_successor_table)
 from .tables import (PFCSTables, pfcs_tables, related_bulk,
                      successor_table)
 
 __all__ = [
     "simulate_trace", "simulate_batch", "sweep", "VECTORIZED_SYSTEMS",
     "PFCSTables", "pfcs_tables", "related_bulk", "successor_table",
+    "PrimeSpacePartition", "shard_mesh", "sharded_successor_table",
 ]

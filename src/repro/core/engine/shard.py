@@ -1,0 +1,389 @@
+"""Mesh-sharded PFCS discovery: partitioned prime spaces + shard_map scans.
+
+PR 1-2 vectorized the simulator and the serving cache on ONE device;
+this module distributes the *PFCS state itself* — the prime space and
+the composite registry — across a ``("data", "model")`` device mesh so
+bulk relationship discovery scales with shard count (DESIGN.md §6).
+
+**Prime-space partition.**  :class:`PrimeSpacePartition` carves every
+cache level's prime range (``core.primes.LEVEL_PRIME_RANGES``) into
+contiguous value blocks dealt round-robin to shards: each shard owns a
+striped family of contiguous prime ranges.  Contiguity keeps each
+block's factorization locality (neighbouring chain pages get
+neighbouring primes under Algorithm 1's ascending allocation); striping
+keeps ownership balanced even though allocation is ascending.  Ownership
+is a pure O(1) function of the prime value — no directory, no
+coordination — so every shard can classify any composite locally.
+
+**Sharded registry classification.**  A relationship whose member
+primes all fall in one shard's ranges is *shard-local*: its composite
+chunks live only in that shard's registry slice and are scanned only
+there.  A relationship straddling prime ranges (a chain edge whose two
+page primes have different owners) is *cross-shard*: its chunks go to
+the exchanged slice that every shard scans.  Classification preserves
+the global registry (registration) order — the candidate-order contract
+the serving cache's parity tests pin down.
+
+**Per-shard bulk discovery under shard_map.**  Successor rows are
+rebuilt per shard through the SAME Pallas kernels the single-device
+path uses (``divisibility_mask_pallas`` for the §4.2 scan), mapped over
+the mesh with ``shard_map``: every shard scans its own registry slice
+against its own query primes.  Cross-shard relationships are resolved
+by a **collective batched-gcd exchange**: each shard contributes its
+slice of the cross-shard composites, ``lax.all_gather`` replicates them
+along the mesh, and each shard computes ``gcd_pallas`` of its *query
+chunk products* (its owned query primes packed into < 2**62 composites)
+against every gathered composite.  A gcd > 1 decodes — exactly, by
+unique factorization — to the member primes the shard owns, so no
+per-query modulo scan ever crosses shard boundaries.
+
+When the host exposes fewer devices than shards (the common laptop
+case), the same math runs as a per-shard host loop over the identical
+kernels — bit-identical tables, no mesh required.  CI exercises the
+real ``shard_map`` path on a forced multi-device CPU mesh
+(``XLA_FLAGS=--xla_force_host_platform_device_count=2``).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..composite import encode_relationship
+from ..primes import CacheLevel, LEVEL_PRIME_RANGES
+
+__all__ = ["PrimeSpacePartition", "shard_mesh", "sharded_successor_table",
+           "ShardScanReport"]
+
+#: per-level value-block width caps, sized so a block holds on the order
+#: of 10-100 primes near the level's range start (prime gaps ~ ln p) —
+#: ownership then stripes at the granularity real workloads allocate at,
+#: instead of one shard swallowing the whole ascending-allocation prefix
+_BLOCK_CAP = {
+    CacheLevel.L1: 64,
+    CacheLevel.L2: 512,
+    CacheLevel.L3: 4_096,
+    CacheLevel.MEM: 1 << 16,
+}
+
+
+class PrimeSpacePartition:
+    """Deterministic owner function: prime value -> shard id.
+
+    Each bounded level range ``(lo, hi)`` is split into contiguous value
+    blocks of width ``min((hi - lo + 1) // (n_shards * stripes_per_shard),
+    cap)`` (caps per level, see ``_BLOCK_CAP``); block ``k`` belongs to
+    shard ``k % n_shards``.  The unbounded MEM range uses the fixed cap
+    width.  ``n_shards == 1`` degenerates to "shard 0 owns everything"
+    (the single-device mesh case).
+    """
+
+    def __init__(self, n_shards: int, stripes_per_shard: int = 8):
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        if stripes_per_shard < 1:
+            raise ValueError("stripes_per_shard must be >= 1")
+        self.n_shards = int(n_shards)
+        self.stripes_per_shard = int(stripes_per_shard)
+        self._blocks: Dict[int, Tuple[int, int]] = {}   # level -> (lo, width)
+        for lvl, (lo, hi) in LEVEL_PRIME_RANGES.items():
+            if hi is None:
+                self._blocks[lvl] = (lo, _BLOCK_CAP[lvl])
+            else:
+                width = max(1, min(
+                    (hi - lo + 1) // (self.n_shards * self.stripes_per_shard),
+                    _BLOCK_CAP[lvl]))
+                self._blocks[lvl] = (lo, width)
+
+    def _level_of(self, p: int) -> int:
+        for lvl, (lo, hi) in LEVEL_PRIME_RANGES.items():
+            if p >= lo and (hi is None or p <= hi):
+                return lvl
+        return CacheLevel.MEM
+
+    def owner(self, p: int) -> int:
+        """Shard owning prime ``p`` — pure function, O(1), no state."""
+        if self.n_shards == 1:
+            return 0
+        lo, width = self._blocks[self._level_of(int(p))]
+        return ((int(p) - lo) // width) % self.n_shards
+
+    def owners(self, primes: Sequence[int]) -> np.ndarray:
+        return np.asarray([self.owner(p) for p in primes], dtype=np.int32)
+
+    def classify(self, registry) -> Tuple[List[List[int]], List[int]]:
+        """Split the live registry into per-shard-local and cross-shard
+        composite *positions* (indices into ``registry.composites_array()``
+        — global registration order, which both scan paths preserve).
+
+        A relationship is local to shard ``s`` iff every member prime is
+        owned by ``s``; otherwise every chunk of it is cross-shard.
+        """
+        arr = registry.composites_array()
+        local: List[List[int]] = [[] for _ in range(self.n_shards)]
+        cross: List[int] = []
+        for pos in range(arr.size):
+            rel = registry.relationship_of_composite(int(arr[pos]))
+            if rel is None:                       # pragma: no cover - defensive
+                continue
+            owners = {self.owner(q) for q in rel.primes}
+            if len(owners) == 1:
+                local[owners.pop()].append(pos)
+            else:
+                cross.append(pos)
+        return local, cross
+
+    def describe(self) -> str:
+        parts = [f"{CacheLevel.NAMES[lvl]}:block={w}"
+                 for lvl, (_, w) in sorted(self._blocks.items())]
+        return (f"PrimeSpacePartition(n_shards={self.n_shards}, "
+                f"stripes={self.stripes_per_shard}, {', '.join(parts)})")
+
+
+def shard_mesh(n_shards: int):
+    """A ``("data", "model")`` mesh with ``data * model == n_shards`` over
+    the locally visible devices, or ``None`` when the host does not expose
+    enough devices (callers then use the bit-identical host loop).
+
+    The model axis takes the largest divisor of ``n_shards`` that is
+    <= sqrt(n_shards) — 1 shard -> (1, 1), 2 -> (2, 1), 4 -> (2, 2) —
+    mirroring ``launch.mesh.make_production_mesh``'s square-ish layout.
+    """
+    import jax
+
+    if n_shards < 1:
+        raise ValueError("n_shards must be >= 1")
+    if len(jax.devices()) < n_shards:
+        return None
+    model = 1
+    for m in range(int(n_shards ** 0.5), 0, -1):
+        if n_shards % m == 0:
+            model = m
+            break
+    return jax.make_mesh((n_shards // model, model), ("data", "model"))
+
+
+def _pad_rows(rows: Sequence[np.ndarray], mult: int, fill: int,
+              dtype=np.int64) -> np.ndarray:
+    """Stack ragged 1-D arrays into (S, W), W bucketed to ``mult * 2**k``
+    — power-of-two buckets bound the number of distinct compiled shapes
+    as tables grow across refreshes."""
+    need = max([r.shape[0] for r in rows] + [1])
+    width = mult
+    while width < need:
+        width *= 2
+    out = np.full((len(rows), width), fill, dtype=dtype)
+    for i, r in enumerate(rows):
+        out[i, :r.shape[0]] = r
+    return out
+
+
+@dataclass
+class ShardScanReport:
+    """Per-refresh work split (benchmark / introspection output)."""
+
+    n_shards: int = 0
+    used_shard_map: bool = False
+    local_composites: List[int] = field(default_factory=list)
+    cross_composites: int = 0
+    queries_per_shard: List[int] = field(default_factory=list)
+    gcd_pairs: int = 0
+
+
+def _one_shard_scan(lc, qs, ck, gathered_cross, *, n_chunks: int,
+                    interpret: bool):
+    """One shard's kernel work: local divisibility mask + cross gcds."""
+    import jax.numpy as jnp
+
+    from repro.kernels.factorize import divisibility_mask_pallas
+    from repro.kernels.gcd import gcd_pallas
+
+    gcd_block = 256
+    mask = divisibility_mask_pallas(lc, qs, interpret=interpret)
+    # batched-gcd exchange: every query chunk x every cross composite
+    x = gathered_cross.shape[0]
+    a = jnp.repeat(ck, x)
+    b = jnp.tile(gathered_cross, n_chunks)
+    pad = (-a.shape[0]) % gcd_block
+    a = jnp.concatenate([a, jnp.ones((pad,), a.dtype)])
+    b = jnp.concatenate([b, jnp.ones((pad,), b.dtype)])
+    g = gcd_pallas(a, b, block_n=gcd_block, interpret=interpret)
+    return mask, g[:n_chunks * x].reshape(n_chunks, x)
+
+
+@functools.lru_cache(maxsize=64)
+def _shard_map_scan(mesh, shapes: Tuple[int, ...], interpret: bool):
+    """Compiled shard_map scan, memoized per (mesh, bucketed shapes)."""
+    import jax
+    from jax.experimental.shard_map import shard_map
+
+    from repro.sharding.partition import shard_stack_spec
+
+    axes = tuple(mesh.axis_names)
+    spec = shard_stack_spec(mesh)       # leading shard axis over data x model
+    _, _, K, _ = shapes
+
+    def body(lc, qs, ck, xc):
+        gathered = jax.lax.all_gather(xc[0], axes, tiled=True)
+        mask, g = _one_shard_scan(lc[0], qs[0], ck[0], gathered,
+                                  n_chunks=K, interpret=interpret)
+        return mask[None], g[None]
+
+    return jax.jit(shard_map(body, mesh=mesh,
+                             in_specs=(spec, spec, spec, spec),
+                             out_specs=(spec, spec), check_rep=False))
+
+
+def _scan_sharded(local_c: np.ndarray, queries: np.ndarray,
+                  chunks: np.ndarray, cross_c: np.ndarray,
+                  mesh) -> Tuple[np.ndarray, np.ndarray]:
+    """The per-shard kernel work: local divisibility masks + cross gcds.
+
+    Inputs are (S, *) padded stacks; returns ``(local_mask (S, C, Q),
+    gcds (S, K, X))``.  With a mesh of exactly S devices the work runs
+    under ``shard_map`` (one shard per device, cross composites
+    replicated by ``lax.all_gather`` — the collective exchange);
+    otherwise a host loop runs the identical kernels per shard.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    interpret = jax.default_backend() != "tpu"
+    S, C = local_c.shape
+    Q = queries.shape[1]
+    K = chunks.shape[1]
+
+    with enable_x64(True):
+        if mesh is not None and mesh.size == S:
+            fn = _shard_map_scan(mesh, (C, Q, K, cross_c.shape[1]),
+                                 interpret)
+            mask, g = fn(jnp.asarray(local_c), jnp.asarray(queries),
+                         jnp.asarray(chunks), jnp.asarray(cross_c))
+        else:                           # host loop, same kernels, same math
+            gathered = jnp.asarray(cross_c.reshape(-1))
+            masks, gs = [], []
+            for s in range(S):
+                m, g = _one_shard_scan(jnp.asarray(local_c[s]),
+                                       jnp.asarray(queries[s]),
+                                       jnp.asarray(chunks[s]), gathered,
+                                       n_chunks=K, interpret=interpret)
+                masks.append(m)
+                gs.append(g)
+            mask, g = jnp.stack(masks), jnp.stack(gs)
+        return np.asarray(mask), np.asarray(g)
+
+
+def sharded_successor_table(registry, assigner, data_ids: Sequence[int],
+                            partition: PrimeSpacePartition,
+                            mesh=None,
+                            report: Optional[ShardScanReport] = None,
+                            ) -> Dict[int, List[int]]:
+    """Mesh-partitioned twin of :func:`repro.core.engine.successor_table`.
+
+    Produces BIT-IDENTICAL rows (same candidates, same order — global
+    registry order, deduplicated by relationship, expanded in
+    ``rel.primes`` order) while splitting the scan work by prime
+    ownership: each shard's Pallas divisibility scan touches only its
+    local registry slice, and only cross-shard relationships ride the
+    collective gcd exchange.
+    """
+    from repro.kernels.ops import factorize_batch
+
+    S = partition.n_shards
+    keyed = [(int(d), p) for d in data_ids
+             if (p := assigner.prime_of(int(d))) is not None]
+    arr = registry.composites_array()
+    if arr.size == 0 or not keyed:
+        return {d: [] for d, _ in keyed}
+
+    # ---- partition state: registry slices and query routing ------------- #
+    local_pos, cross_pos = partition.classify(registry)
+    by_shard: List[List[Tuple[int, int]]] = [[] for _ in range(S)]
+    for d, p in keyed:
+        by_shard[partition.owner(p)].append((d, p))
+
+    local_c = _pad_rows([arr[np.asarray(pos, dtype=np.int64)]
+                         if pos else np.empty(0, np.int64)
+                         for pos in local_pos], 256, 1)
+    queries = _pad_rows([np.asarray([p for _, p in sh], dtype=np.int64)
+                         for sh in by_shard], 512, 0)
+    # query chunk products: each shard's owned query primes packed into
+    # < 2**62 composites — the gcd exchange payload
+    chunk_rows = []
+    for sh in by_shard:
+        ps = sorted({p for _, p in sh})
+        chunk_rows.append(np.asarray(encode_relationship(ps) if ps else [],
+                                     dtype=np.int64))
+    chunks = _pad_rows(chunk_rows, 1, 1)
+    cross_arr = (arr[np.asarray(cross_pos, dtype=np.int64)]
+                 if cross_pos else np.empty(0, np.int64))
+    # per-shard slice width bucketed to powers of two, like every other
+    # stack: an exact ceil(cross/S) width would change the compiled
+    # shard_map shape on nearly every registry growth
+    need = -(-max(cross_arr.size, 1) // S)
+    per = 8
+    while per < need:
+        per *= 2
+    cross_sh = np.ones((S, per), dtype=np.int64)
+    for s in range(S):
+        sl = cross_arr[s * per:(s + 1) * per]
+        cross_sh[s, :sl.shape[0]] = sl
+
+    # ---- kernel work (shard_map when the mesh matches) ------------------ #
+    mask, gcds = _scan_sharded(local_c, queries, chunks, cross_sh, mesh)
+    if report is not None:
+        report.n_shards = S
+        report.used_shard_map = mesh is not None and mesh.size == S
+        report.local_composites = [len(p) for p in local_pos]
+        report.cross_composites = len(cross_pos)
+        report.queries_per_shard = [len(sh) for sh in by_shard]
+        report.gcd_pairs = int(chunks.shape[1] * cross_sh.size)
+
+    # ---- decode the gcd exchange: which cross composites contain which
+    # owned query primes (exact — unique factorization) ------------------- #
+    cross_of_prime: Dict[int, List[int]] = {}
+    X = cross_sh.size                       # gathered (padded) width
+    for s in range(S):
+        if not by_shard[s] or not cross_pos:
+            continue
+        pool = np.asarray(sorted({p for _, p in by_shard[s]}), dtype=np.int64)
+        gs = gcds[s]                        # (K, X)
+        hit_k, hit_x = np.nonzero(gs > 1)
+        valid = hit_x < len(cross_pos)      # drop padding columns
+        uniq = np.unique(gs[hit_k[valid], hit_x[valid]])
+        if uniq.size == 0:
+            continue
+        facs, residual = factorize_batch(uniq, pool)
+        assert np.all(residual == 1), "gcd escaped the shard's query pool"
+        fac_of = {int(g): fs for g, fs in zip(uniq, facs)}
+        for k, x in zip(hit_k[valid], hit_x[valid]):
+            for q in fac_of[int(gs[k, x])]:
+                cross_of_prime.setdefault(int(q), []).append(int(x))
+
+    # ---- assemble rows in the oracle's exact order ---------------------- #
+    out: Dict[int, List[int]] = {}
+    for s in range(S):
+        pos_map = local_pos[s]
+        for col, (d, p) in enumerate(by_shard[s]):
+            hits = [pos_map[i] for i in np.nonzero(mask[s, :len(pos_map),
+                                                        col])[0]]
+            hits.extend(cross_pos[x] for x in cross_of_prime.get(p, ()))
+            row: List[int] = []
+            seen: set = set()
+            for pos in sorted(hits):        # ascending == registry order
+                rel = registry.relationship_of_composite(int(arr[pos]))
+                if rel is None or rel.rel_id in seen:
+                    continue
+                seen.add(rel.rel_id)
+                for q in rel.primes:        # oracle's frozenset order
+                    if q == p:
+                        continue
+                    succ = assigner.data_of(q)
+                    if succ is not None:
+                        row.append(succ)
+            out[d] = row
+    return out

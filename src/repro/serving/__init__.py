@@ -12,24 +12,29 @@ Public entry points (documented with runnable examples in docs/api.md):
     bit-exact oracle; per-page §4.2 scans)
   * :class:`VectorizedPagedKVCache` — array-state page tables + bulk
     table-driven chain discovery (DESIGN.md §5, the serving hot path)
+  * :class:`ShardedPagedKVCache`    — mesh-partitioned PFCS state:
+    per-shard prime ranges, registry slices, and ``shard_map`` bulk
+    discovery with a cross-shard gcd exchange (DESIGN.md §6)
   * :class:`ServingEngine`          — continuous-batching engine over
-    either cache; :meth:`ServingEngine.submit` /
+    any of the caches; :meth:`ServingEngine.submit` /
     :meth:`ServingEngine.step` drive the request lifecycle
   * :class:`ExpertCache`            — MoE expert-weight cache with
     co-activation prefetch
 
-The vectorized cache must reproduce the oracle's ``PageStats`` counters
-bit-for-bit (``tests/test_serving.py``), mirroring the engine-vs-oracle
+The vectorized and sharded caches must reproduce the oracle's
+``PageStats`` counters bit-for-bit (``tests/test_serving.py``,
+``tests/test_serving_sharded.py``), mirroring the engine-vs-oracle
 discipline of ``tests/test_engine.py``.
 """
 
 from .engine import Request, ServingEngine
 from .expert_cache import ExpertCache, ExpertCacheStats
 from .kv_cache import PARITY_COUNTERS, PagedKVCache, PageStats
+from .kv_cache_sharded import ShardedPagedKVCache
 from .kv_cache_vec import VectorizedPagedKVCache
 
 __all__ = [
     "Request", "ServingEngine", "ExpertCache", "ExpertCacheStats",
     "PagedKVCache", "PageStats", "PARITY_COUNTERS",
-    "VectorizedPagedKVCache",
+    "ShardedPagedKVCache", "VectorizedPagedKVCache",
 ]

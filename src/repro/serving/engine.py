@@ -8,7 +8,7 @@ touches the pages the batch will read — PFCS prefetch means the
 successor pages of every active chain are already HBM-resident with
 zero false-positive traffic.
 
-Two cache backends (``kv=``):
+Three cache backends (``kv=``):
 
   * ``"vec"`` (default) — :class:`~repro.serving.kv_cache_vec.
     VectorizedPagedKVCache`: array page tables + table-driven bulk
@@ -18,6 +18,11 @@ Two cache backends (``kv=``):
     (DESIGN.md §5).
   * ``"scalar"`` — the oracle :class:`~repro.serving.kv_cache.
     PagedKVCache`; bit-exact same counters, one §4.2 scan per page.
+  * ``"sharded"`` — :class:`~repro.serving.kv_cache_sharded.
+    ShardedPagedKVCache`: PFCS state partitioned over a
+    ``("data", "model")`` mesh (``shards=N``), per-shard bulk
+    discovery under ``shard_map`` (DESIGN.md §6); still bit-exact
+    against the scalar oracle on every counter.
 
 On-device compute is the model's ``prefill`` / ``decode_step``; pass
 ``model=None`` to run the engine as a pure page-management load
@@ -37,6 +42,7 @@ from typing import Any, Dict, List, Optional, Sequence
 import numpy as np
 
 from .kv_cache import PagedKVCache
+from .kv_cache_sharded import ShardedPagedKVCache
 from .kv_cache_vec import VectorizedPagedKVCache
 
 __all__ = ["Request", "ServingEngine"]
@@ -62,7 +68,7 @@ class ServingEngine:
                  max_seq: int = 512, page_size: int = 16,
                  hbm_pages: int = 256, greedy: bool = True,
                  kv: str = "vec", prefetch_budget: int = 4,
-                 reread_window: int = 1):
+                 reread_window: int = 1, shards: int = 2, mesh="auto"):
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -75,8 +81,13 @@ class ServingEngine:
             self.pages = PagedKVCache(hbm_pages=hbm_pages,
                                       page_size=page_size,
                                       prefetch_budget=prefetch_budget)
+        elif kv == "sharded":
+            self.pages = ShardedPagedKVCache(
+                hbm_pages=hbm_pages, page_size=page_size,
+                prefetch_budget=prefetch_budget, n_shards=shards, mesh=mesh)
         else:
-            raise ValueError(f"kv must be 'vec' or 'scalar', got {kv!r}")
+            raise ValueError(f"kv must be 'vec', 'scalar' or 'sharded', "
+                             f"got {kv!r}")
         self.queue: List[Request] = []
         self.slots: List[Optional[Request]] = [None] * max_batch
         if model is not None:

@@ -188,6 +188,12 @@ class VectorizedPagedKVCache(PagedKVCache):
             backend = "host"   # bulk rebuild semantics == host replay
         rows = successor_table(self.registry, self.assigner,
                                range(self._next_page), discover=backend)
+        self._install_rows(rows)
+
+    def _install_rows(self, rows: Dict[int, List[int]]) -> None:
+        """Replace the whole successor table with freshly-built rows and
+        stamp the registry version (shared by every bulk-rebuild
+        backend, including the sharded one)."""
         self._succ.fill(EMPTY)
         self._succ_len.fill(0)
         for page, row in rows.items():

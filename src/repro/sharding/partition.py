@@ -42,18 +42,57 @@ def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.shape)
 
 
+def shard_stack_spec(mesh: Mesh) -> P:
+    """PartitionSpec for per-shard PFCS state stacks (DESIGN.md §6).
+
+    Sharded-cache state — per-shard registry slices, query primes, chunk
+    products — stacks shards on the leading axis and partitions it over
+    EVERY mesh axis (data x model flattened: one shard per device, no
+    axis idle doing redundant scans), the same convention as
+    ``batch_shardings(all_axes=True)`` for dp_only batches.
+    """
+    return P(tuple(mesh.axis_names))
+
+
+def _axes_total(mesh: Mesh, axes) -> Tuple[Tuple[str, ...], int]:
+    """Normalized axes tuple + the product of their mesh sizes."""
+    ax = (axes,) if isinstance(axes, str) else tuple(axes)
+    return ax, int(np.prod([mesh_axis_size(mesh, a) for a in ax]))
+
+
 def _div(dim: int, mesh: Mesh, axes) -> bool:
     if axes is None:
         return True
-    if isinstance(axes, str):
-        axes = (axes,)
-    total = int(np.prod([mesh_axis_size(mesh, a) for a in axes]))
-    return dim % total == 0
+    return dim % _axes_total(mesh, axes)[1] == 0
+
+
+#: (dim, axes, axes-size) triples already reported — each distinct
+#: fallback warns exactly ONCE per process, not once per layer/leaf
+#: (gemma's single KV head appears in every attention block)
+_WARNED_FALLBACKS: set = set()
+
+
+def reset_fallback_warnings() -> None:
+    """Clear the warn-once dedup state (test isolation hook)."""
+    _WARNED_FALLBACKS.clear()
 
 
 def _maybe(dim: int, mesh: Mesh, axes):
-    """axes if divisible else None (replicate)."""
-    return axes if (axes and _div(dim, mesh, axes)) else None
+    """axes if divisible else None (replicate, warning once per distinct
+    fallback — a silent replication of a dim the rules meant to shard is
+    the kind of perf cliff that should be visible in logs)."""
+    if not axes:
+        return None
+    ax, total = _axes_total(mesh, axes)
+    if dim % total == 0:
+        return axes
+    key = (int(dim), ax, total)
+    if key not in _WARNED_FALLBACKS:
+        _WARNED_FALLBACKS.add(key)
+        log.warning(
+            "sharding fallback: dim %d does not divide mesh axes %s "
+            "(size %d); replicating instead", dim, ax, total)
+    return None
 
 
 # --------------------------------------------------------------------------- #

@@ -1,0 +1,267 @@
+"""Shared test-workload generators: hypothesis strategies + the
+deterministic builders behind them.
+
+Every randomized workload the suite drives caches with lives here, in
+two layers:
+
+  1. **Deterministic builders** — pure functions of a small spec
+     (seed + sizes) that expand into concrete workloads:
+     :func:`build_kv_ops` / :func:`apply_kv_ops` for paged-KV request
+     streams, :func:`drive_kv` (the classic serving parity driver),
+     :func:`trace_zoo` / :func:`adversarial_trace` for simulator
+     traces.  The ad-hoc randomized loops that used to live inline in
+     ``tests/test_serving.py`` / ``tests/test_engine.py`` now call
+     these.
+  2. **Hypothesis strategies** (via ``hypothesis_compat`` — clean SKIP
+     when the package is absent) that sample the *specs*:
+     :func:`kv_workload_specs` for serving-cache differential fuzzing
+     (chain topologies with shared prefixes, 1-slot HBM, registry
+     drops, eviction-adversarial sweeps), :func:`trace_specs` for
+     engine traces, :func:`adversarial_stream_specs` for
+     recency-thrashing access streams.
+
+Sampling specs rather than raw streams keeps shrinking effective (a
+failing case minimizes to a tiny seed + sizes tuple) and lets the
+differential tests replay the IDENTICAL abstract op sequence against
+every cache implementation — selectors resolve against live state, so
+two bit-equal caches see bit-equal concrete streams.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+__all__ = [
+    "KVWorkloadSpec", "build_kv_ops", "apply_kv_ops", "drive_kv",
+    "kv_workload_specs", "trace_zoo", "trace_specs", "make_trace",
+    "adversarial_trace", "adversarial_stream_specs",
+    "HAVE_HYPOTHESIS", "given", "settings", "st",
+]
+
+
+# --------------------------------------------------------------------------- #
+# paged-KV workloads (serving tier)                                           #
+# --------------------------------------------------------------------------- #
+
+@dataclass(frozen=True)
+class KVWorkloadSpec:
+    """Compact description of a serving workload; expanded by
+    :func:`build_kv_ops` into an abstract op sequence."""
+
+    seed: int = 0
+    n_requests: int = 12
+    n_touches: int = 160
+    key_space: int = 400
+    shared_pool: int = 32          # tokens available for shared prefixes
+    max_tail: int = 28             # per-request tail length bound
+    release: bool = True           # retire old requests mid-stream
+    drop_primes: bool = False      # out-of-band Algorithm-1 prime drops
+    sweeps: int = 0                # eviction-adversarial full-chain sweeps
+
+
+def build_kv_ops(spec: KVWorkloadSpec) -> List[Tuple]:
+    """Expand a spec into an abstract op list.
+
+    Ops use *selectors* (resolved modulo live state at apply time), so
+    the same list drives any cache implementation:
+
+      ("register", rid, tokens)  — submit a request's prompt
+      ("touch", a, b)            — touch live request a-th, page b-th
+      ("sweep", a)               — touch every page of a live request in
+                                   chain order (sequential re-read — the
+                                   LRU-adversarial scan pattern)
+      ("release", )              — retire the oldest live request
+      ("drop", d)                — assigner.release a page's L2 prime
+                                   (registry drop -> table rebuild path)
+    """
+    rng = np.random.default_rng(spec.seed)
+    shared = list(rng.integers(0, spec.key_space, size=spec.shared_pool))
+    ops: List[Tuple] = []
+    per_req = max(1, spec.n_touches // max(1, spec.n_requests))
+    for r in range(spec.n_requests):
+        pfx = int(rng.integers(0, spec.shared_pool))
+        tail = list(rng.integers(0, spec.key_space,
+                                 size=int(rng.integers(4, spec.max_tail))))
+        ops.append(("register", r, tuple(shared[:pfx] + tail)))
+        if spec.drop_primes and rng.integers(4) == 0:
+            ops.append(("drop", int(rng.integers(1 << 30))))
+        for _ in range(per_req):
+            ops.append(("touch", int(rng.integers(1 << 30)),
+                        int(rng.integers(1 << 30))))
+        if spec.sweeps and rng.integers(max(1, spec.n_requests
+                                            // spec.sweeps)) == 0:
+            ops.append(("sweep", int(rng.integers(1 << 30))))
+        if spec.release and r > 6 and rng.integers(3) == 0:
+            ops.append(("release",))
+    return ops
+
+
+def apply_kv_ops(kv, ops: Sequence[Tuple]) -> List[str]:
+    """Replay an abstract op list against one cache; returns the tier
+    string of every touch (the differential-comparison payload)."""
+    from repro.core.primes import CacheLevel
+
+    tiers: List[str] = []
+    live: List[int] = []
+    for op in ops:
+        kind = op[0]
+        if kind == "register":
+            _, rid, tokens = op
+            kv.register_request(rid, list(tokens))
+            live.append(rid)
+        elif kind == "touch":
+            _, a, b = op
+            if not live:
+                continue
+            rid = live[a % len(live)]
+            chain = kv.chains.get(rid) or ()
+            if chain:
+                tiers.append(kv.touch(rid, b % len(chain)))
+        elif kind == "sweep":
+            (_, a) = op
+            if not live:
+                continue
+            rid = live[a % len(live)]
+            chain = kv.chains.get(rid) or ()
+            if chain:
+                tiers.extend(kv.touch_batch([(rid, j)
+                                             for j in range(len(chain))]))
+        elif kind == "release":
+            if live:
+                kv.release_request(live.pop(0))
+        elif kind == "drop":
+            (_, d) = op
+            if kv._next_page:
+                kv.assigner.release(d % kv._next_page, CacheLevel.L2)
+        else:                       # pragma: no cover - builder invariant
+            raise ValueError(f"unknown op {kind!r}")
+    return tiers
+
+
+def drive_kv(kv, seed: int, n_requests: int = 16,
+             n_touches: int = 400) -> List[str]:
+    """The classic serving parity driver (shared-prefix request mix,
+    interleaved registration and touches, releases) — byte-identical to
+    the loop that used to live in ``tests/test_serving.py``."""
+    rng = np.random.default_rng(seed)
+    shared = list(rng.integers(0, 400, size=32))
+    tiers: List[str] = []
+    live: List[int] = []
+    for r in range(n_requests):
+        pfx = int(rng.integers(0, 32))
+        tail = list(rng.integers(0, 400, size=int(rng.integers(4, 28))))
+        kv.register_request(r, shared[:pfx] + tail)
+        live.append(r)
+        for _ in range(n_touches // n_requests):
+            q = live[int(rng.integers(len(live)))]
+            if kv.chains[q]:
+                tiers.append(kv.touch(q, int(rng.integers(
+                    len(kv.chains[q])))))
+        if len(live) > 6 and rng.integers(3) == 0:
+            kv.release_request(live.pop(0))
+    return tiers
+
+
+def kv_workload_specs():
+    """Strategy over serving workload specs, biased toward the edges the
+    parity suite cares about: degenerate 1-slot HBM interleavings come
+    from the caller's cache config; this spec covers chain topology
+    (shared-prefix depth), registry drops, and adversarial sweeps."""
+    return st.builds(
+        KVWorkloadSpec,
+        seed=st.integers(min_value=0, max_value=2**16),
+        n_requests=st.integers(min_value=3, max_value=18),
+        n_touches=st.integers(min_value=10, max_value=240),
+        key_space=st.sampled_from([60, 400]),
+        shared_pool=st.sampled_from([8, 32]),
+        max_tail=st.sampled_from([6, 28]),
+        release=st.booleans(),
+        drop_primes=st.booleans(),
+        sweeps=st.sampled_from([0, 2]),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# simulator traces (engine tier)                                              #
+# --------------------------------------------------------------------------- #
+
+def trace_zoo(length: int, seeds: Sequence[int] = (1, 2)) -> list:
+    """The engine suite's standard covering set: skewed zipf traffic,
+    relationship-rich db joins, and the LRU-adversarial sequential
+    scan."""
+    from repro.core import db_join_trace, scan_trace, zipf_trace
+
+    return [
+        zipf_trace(n_keys=400, n_accesses=length, seed=seeds[0]),
+        db_join_trace(n_orders=150, n_customers=40, n_items=80,
+                      n_queries=length, seed=seeds[1]),
+        scan_trace(n_keys=length // 3, n_passes=3),
+    ]
+
+
+def make_trace(kind: str, length: int, seed: int):
+    """One trace by kind — the expansion target of :func:`trace_specs`."""
+    from repro.core import (db_join_trace, graph_walk_trace, scan_trace,
+                            zipf_trace)
+
+    if kind == "zipf":
+        return zipf_trace(n_keys=300, n_accesses=length, seed=seed)
+    if kind == "db":
+        return db_join_trace(n_orders=120, n_customers=30, n_items=60,
+                             n_queries=length, seed=seed)
+    if kind == "graph":
+        return graph_walk_trace(n_keys=250, relationship_density=0.6,
+                                n_accesses=length, seed=seed)
+    if kind == "scan":
+        return scan_trace(n_keys=max(4, length // 3), n_passes=3)
+    if kind == "adversarial":
+        return adversarial_trace(length=length, seed=seed)
+    raise ValueError(f"unknown trace kind {kind!r}")
+
+
+def adversarial_trace(length: int = 1200, capacity: int = 96,
+                      seed: int = 0, hot_keys: int = 8):
+    """Eviction-adversarial access stream: cyclic sweeps over a working
+    set one larger than the given capacity (every access misses under
+    plain LRU of that size) interleaved with a small reused hot set —
+    the recency-thrash pattern scan-resistant policies (2Q/ARC/LIRS)
+    exist to survive."""
+    from repro.core.traces import Trace
+
+    rng = np.random.default_rng(seed)
+    sweep_keys = capacity + 1
+    acc = []
+    pos = 0
+    for _ in range(length):
+        if rng.integers(4) == 0:
+            acc.append(sweep_keys + int(rng.integers(hot_keys)))
+        else:
+            acc.append(pos % sweep_keys)
+            pos += 1
+    return Trace(name=f"adversarial[{capacity}]",
+                 accesses=np.asarray(acc, dtype=np.int64),
+                 relationships=[], n_keys=sweep_keys + hot_keys,
+                 meta={"kind": "adversarial"})
+
+
+def trace_specs():
+    """Strategy over (kind, length, seed) simulator-trace specs."""
+    return st.tuples(
+        st.sampled_from(["zipf", "db", "graph", "scan", "adversarial"]),
+        st.integers(min_value=64, max_value=900),
+        st.integers(min_value=0, max_value=2**16),
+    )
+
+
+def adversarial_stream_specs():
+    """Strategy over eviction-adversarial stream parameters."""
+    return st.tuples(
+        st.integers(min_value=64, max_value=600),    # length
+        st.sampled_from([4, 16, 96]),                # thrashed capacity
+        st.integers(min_value=0, max_value=2**16),   # seed
+    )

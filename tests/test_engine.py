@@ -11,9 +11,9 @@ Pallas kernels) must build identical tables.
 import numpy as np
 import pytest
 
+from strategies import adversarial_trace, trace_zoo
 from repro.core import (simulate_baseline, simulate_pfcs, db_join_trace,
-                        graph_walk_trace, run_all_systems, scan_trace,
-                        zipf_trace)
+                        graph_walk_trace, run_all_systems, zipf_trace)
 from repro.core.engine import (pfcs_tables, related_bulk, simulate_batch,
                                simulate_trace)
 from repro.core.engine.tables import make_pfcs_cache
@@ -23,12 +23,9 @@ T = 1200   # shared length -> slot-array policies share one compile
 
 
 def _traces():
-    return [
-        zipf_trace(n_keys=400, n_accesses=T, seed=1),
-        db_join_trace(n_orders=150, n_customers=40, n_items=80,
-                      n_queries=T, seed=2),
-        scan_trace(n_keys=T // 3, n_passes=3),     # adversarial recency
-    ]
+    # shared covering set (zipf / db-join / adversarial scan) from
+    # tests/strategies.py — the same builders the property tests sample
+    return trace_zoo(T)
 
 
 def _assert_same(a, b, *, prefetch=False):
@@ -47,6 +44,25 @@ def test_baseline_bit_equivalence(policy):
     for tr in _traces():
         a = simulate_baseline(policy, tr, CAPS)
         b = simulate_trace(tr, policy, CAPS)
+        _assert_same(a, b)
+
+
+@pytest.mark.parametrize("caps", [
+    (("L1", 3), ("L2", 29), ("L3", 7)),     # unequal, non-monotone tiers
+    (("ONLY", 16),),                        # degenerate single level, L=1
+], ids=["unequal-tiers", "single-level"])
+@pytest.mark.parametrize("policy", ["lru", "fifo", "2q", "arc", "lirs"])
+def test_hierarchy_tier_attribution_matches_oracle(policy, caps):
+    """``engine.hierarchy.build_hierarchy``'s shadow-rank tier
+    attribution must equal ``simulator._BaselineHierarchy`` per level —
+    including tier sizes that are NOT ascending (an L3 smaller than L2
+    shifts every cumulative shadow boundary) and the L=1 hierarchy
+    (where every resident hit lands in the only shadow or MEM)."""
+    total = sum(c for _, c in caps)
+    for tr in [zipf_trace(n_keys=200, n_accesses=600, seed=11),
+               adversarial_trace(length=600, capacity=total, seed=3)]:
+        a = simulate_baseline(policy, tr, caps)
+        b = simulate_trace(tr, policy, caps)
         _assert_same(a, b)
 
 

@@ -14,13 +14,16 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from strategies import drive_kv
 from repro.serving.expert_cache import ExpertCache
 from repro.serving.kv_cache import PARITY_COUNTERS, PagedKVCache
+from repro.serving.kv_cache_sharded import ShardedPagedKVCache
 from repro.serving.kv_cache_vec import VectorizedPagedKVCache
 
 IMPLS = {
     "scalar": PagedKVCache,
     "vec": VectorizedPagedKVCache,
+    "sharded": ShardedPagedKVCache,
 }
 
 
@@ -80,36 +83,17 @@ def test_eviction_to_host_and_demand_return(impl):
 # vec == scalar, bit for bit                                                  #
 # --------------------------------------------------------------------------- #
 
-def _drive(kv, seed: int, n_requests: int = 16, n_touches: int = 400):
-    """Deterministic randomized workload: shared-prefix request mix,
-    interleaved registration and touches, releases."""
-    rng = np.random.default_rng(seed)
-    shared = list(rng.integers(0, 400, size=32))
-    tiers = []
-    live = []
-    for r in range(n_requests):
-        pfx = int(rng.integers(0, 32))
-        tail = list(rng.integers(0, 400, size=int(rng.integers(4, 28))))
-        kv.register_request(r, shared[:pfx] + tail)
-        live.append(r)
-        for _ in range(n_touches // n_requests):
-            q = live[int(rng.integers(len(live)))]
-            if kv.chains[q]:
-                tiers.append(kv.touch(q, int(rng.integers(
-                    len(kv.chains[q])))))
-        if len(live) > 6 and rng.integers(3) == 0:
-            kv.release_request(live.pop(0))
-    return tiers
-
-
 @pytest.mark.parametrize("hbm,budget", [(16, 4), (2, 0), (64, 8), (4, 1),
                                         (1, 2)])
 def test_vec_matches_scalar_oracle(hbm, budget):
+    """Deterministic randomized workload (``strategies.drive_kv``):
+    shared-prefix request mix, interleaved registration and touches,
+    releases."""
     for seed in (0, 1, 2):
         a = PagedKVCache(hbm_pages=hbm, page_size=4, prefetch_budget=budget)
         b = VectorizedPagedKVCache(hbm_pages=hbm, page_size=4,
                                    prefetch_budget=budget)
-        ta, tb = _drive(a, seed), _drive(b, seed)
+        ta, tb = drive_kv(a, seed), drive_kv(b, seed)
         assert ta == tb                              # per-touch tiers
         for f in PARITY_COUNTERS:
             assert getattr(a.stats, f) == getattr(b.stats, f), f

@@ -1,0 +1,257 @@
+"""Mesh-sharded serving cache: differential parity + partition laws.
+
+Discipline (extends tests/test_serving.py): the scalar ``PagedKVCache``
+is the bit-exact oracle; ``VectorizedPagedKVCache`` AND
+``ShardedPagedKVCache`` (at mesh sizes 1 and 2) must reproduce every
+``PARITY_COUNTERS`` entry, every per-touch tier, and the exact HBM LRU
+order under ANY interleaving of registration, touches, releases,
+adversarial sweeps, and out-of-band registry drops — including the
+1-slot-HBM eviction edge.  The same abstract op sequence
+(``strategies.build_kv_ops``) replays against every implementation, so
+a single drawn spec differentially exercises all four caches at once.
+"""
+
+import numpy as np
+import pytest
+
+from strategies import (KVWorkloadSpec, apply_kv_ops, build_kv_ops,
+                        given, kv_workload_specs, settings, st)
+from repro.core.engine.shard import (PrimeSpacePartition, shard_mesh,
+                                     sharded_successor_table)
+from repro.serving.kv_cache import PARITY_COUNTERS, PagedKVCache
+from repro.serving.kv_cache_sharded import ShardedPagedKVCache
+from repro.serving.kv_cache_vec import VectorizedPagedKVCache
+
+
+def _differential(spec: KVWorkloadSpec, hbm: int, budget: int) -> None:
+    """Replay one spec against oracle / vec / sharded(1) / sharded(2)."""
+    ops = build_kv_ops(spec)
+    caches = {
+        "scalar": PagedKVCache(hbm_pages=hbm, page_size=4,
+                               prefetch_budget=budget),
+        "vec": VectorizedPagedKVCache(hbm_pages=hbm, page_size=4,
+                                      prefetch_budget=budget),
+        "shard1": ShardedPagedKVCache(hbm_pages=hbm, page_size=4,
+                                      prefetch_budget=budget, n_shards=1),
+        "shard2": ShardedPagedKVCache(hbm_pages=hbm, page_size=4,
+                                      prefetch_budget=budget, n_shards=2),
+    }
+    tiers = {name: apply_kv_ops(kv, ops) for name, kv in caches.items()}
+    oracle = caches["scalar"]
+    for name, kv in caches.items():
+        if name == "scalar":
+            continue
+        assert tiers[name] == tiers["scalar"], name
+        for f in PARITY_COUNTERS:
+            assert getattr(kv.stats, f) == getattr(oracle.stats, f), \
+                (name, f)
+        assert list(kv.hbm.items()) == list(oracle.hbm.items()), name
+        assert kv.host == oracle.host, name
+        assert kv.stats.registry_scans == 0, name
+    for name in ("shard1", "shard2"):
+        kv = caches[name]
+        assert (kv.aggregate_shard_stats().parity_tuple()
+                == kv.stats.parity_tuple()), name
+
+
+# --------------------------------------------------------------------------- #
+# property-based differential fuzz (hypothesis; clean SKIP without it)        #
+# --------------------------------------------------------------------------- #
+
+@given(spec=kv_workload_specs(),
+       hbm=st.sampled_from([1, 2, 8, 32]),
+       budget=st.integers(min_value=0, max_value=4))
+@settings(max_examples=15, deadline=None)
+def test_differential_fuzz_property(spec, hbm, budget):
+    """Any drawn workload: all four caches agree bit-for-bit — tiers,
+    parity counters, LRU order, host tier, per-shard aggregation."""
+    _differential(spec, hbm, budget)
+
+
+# deterministic pinned cases: the suite exercises the edge paths even
+# when hypothesis is not installed (tier-1 must not lose this coverage)
+_PINNED = [
+    # 1-slot HBM: every insert evicts
+    (KVWorkloadSpec(seed=3, n_requests=8, n_touches=80), 1, 3),
+    # registry drop -> bulk table rebuild path, small HBM
+    (KVWorkloadSpec(seed=5, n_requests=10, n_touches=100,
+                    drop_primes=True), 4, 2),
+    # eviction-adversarial sweeps + releases, prefetch off
+    (KVWorkloadSpec(seed=7, n_requests=12, n_touches=60, sweeps=2), 8, 0),
+    # deep shared prefixes, dense touches
+    (KVWorkloadSpec(seed=11, n_requests=9, n_touches=120, key_space=60,
+                    shared_pool=32, max_tail=6), 16, 4),
+]
+
+
+@pytest.mark.parametrize("spec,hbm,budget", _PINNED,
+                         ids=["hbm1", "registry-drop", "sweeps", "prefix"])
+def test_differential_fuzz_pinned(spec, hbm, budget):
+    _differential(spec, hbm, budget)
+
+
+# --------------------------------------------------------------------------- #
+# prime-space partition laws                                                  #
+# --------------------------------------------------------------------------- #
+
+def test_partition_owner_is_total_stable_and_striped():
+    part = PrimeSpacePartition(n_shards=4)
+    primes = [2, 997, 1009, 1523, 6007, 99991, 100003, 999983, 1000003]
+    owners = [part.owner(p) for p in primes]
+    assert all(0 <= o < 4 for o in owners)
+    assert owners == [part.owner(p) for p in primes]      # pure function
+    assert list(part.owners(primes)) == owners
+    # contiguity: within one value block, ownership never changes
+    lo, width = part._blocks[1]                           # L2 level
+    block0 = [p for p in range(lo, lo + width) if part.owner(p) is not None]
+    assert len({part.owner(p) for p in block0}) == 1
+    # striping: consecutive blocks rotate shards
+    assert part.owner(lo) != part.owner(lo + width)
+    # a real workload spreads ownership over >1 shard
+    kv = ShardedPagedKVCache(hbm_pages=8, page_size=4, n_shards=4)
+    kv.register_request(0, list(range(1024)))             # 256-page chain
+    spread = {kv.owner_of_page(pid) for pid in kv.chains[0]}
+    assert len(spread) > 1
+    assert PrimeSpacePartition(1).owner(99991) == 0       # degenerate
+    with pytest.raises(ValueError):
+        PrimeSpacePartition(0)
+
+
+def test_classify_partitions_registry_in_order():
+    kv = ShardedPagedKVCache(hbm_pages=16, page_size=4, n_shards=2)
+    rng = np.random.default_rng(2)
+    shared = list(rng.integers(0, 3000, size=24))
+    for r in range(8):
+        # long tails -> several hundred pages -> chains straddle the
+        # partition's prime blocks, so the cross-shard path is live
+        tail = list(rng.integers(0, 3000, size=int(rng.integers(80, 200))))
+        kv.register_request(r, shared[:int(rng.integers(0, 24))] + tail)
+    local, cross = kv.partition.classify(kv.registry)
+    arr = kv.registry.composites_array()
+    all_pos = sorted(p for sh in local for p in sh) + sorted(cross)
+    assert sorted(all_pos) == list(range(arr.size))       # exact partition
+    for s, sh in enumerate(local):
+        assert sh == sorted(sh)                           # registry order
+        for pos in sh:
+            rel = kv.registry.relationship_of_composite(int(arr[pos]))
+            assert {kv.partition.owner(q) for q in rel.primes} == {s}
+    for pos in cross:
+        rel = kv.registry.relationship_of_composite(int(arr[pos]))
+        assert len({kv.partition.owner(q) for q in rel.primes}) > 1
+    # at this scale chains straddle prime blocks: the exchange is live
+    assert cross, "workload produced no cross-shard chains"
+
+
+# --------------------------------------------------------------------------- #
+# sharded bulk discovery == single-device bulk discovery                      #
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("n_shards", [1, 2, 3])
+def test_sharded_successor_table_matches_global(n_shards):
+    from repro.core.engine import successor_table
+
+    kv = VectorizedPagedKVCache(hbm_pages=16, page_size=4,
+                                prefetch_budget=3)
+    rng = np.random.default_rng(5)
+    shared = list(rng.integers(0, 200, size=16))
+    for r in range(8):
+        tail = list(rng.integers(0, 200, size=int(rng.integers(4, 16))))
+        kv.register_request(r, shared[:int(rng.integers(0, 16))] + tail)
+    pages = range(kv._next_page)
+    host = successor_table(kv.registry, kv.assigner, pages, discover="host")
+    part = PrimeSpacePartition(n_shards)
+    sharded = sharded_successor_table(kv.registry, kv.assigner, pages,
+                                      part, mesh=None)
+    assert sharded == host
+
+
+def test_sharded_refresh_crosschecks_against_kernel_backend():
+    kv = ShardedPagedKVCache(hbm_pages=16, page_size=4,
+                             prefetch_budget=3, n_shards=2)
+    rng = np.random.default_rng(6)
+    for r in range(6):
+        kv.register_request(r, list(rng.integers(0, 150,
+                                                 size=int(rng.integers(8, 20)))))
+    kv.refresh_tables()                       # sharded path
+    sharded_rows = kv.successor_rows()
+    kv.refresh_tables(discover="kernel")      # single-device Pallas bulk
+    assert kv.successor_rows() == sharded_rows
+
+
+# --------------------------------------------------------------------------- #
+# mesh plumbing                                                               #
+# --------------------------------------------------------------------------- #
+
+def test_degenerate_single_device_mesh_uses_shard_map():
+    """n_shards=1 always has enough devices: the real shard_map path
+    must run (and stay bit-exact) even on a 1-device host."""
+    kv = ShardedPagedKVCache(hbm_pages=8, page_size=4, n_shards=1)
+    assert kv.mesh is not None and kv.mesh.size == 1
+    oracle = PagedKVCache(hbm_pages=8, page_size=4)
+    for c in (kv, oracle):
+        c.register_request(0, list(range(32)))
+        c.touch_batch([(0, j) for j in range(8)])
+    assert kv.last_scan.used_shard_map
+    assert kv.stats.parity_tuple() == oracle.stats.parity_tuple()
+
+
+def test_multi_device_mesh_when_forced():
+    """Under XLA_FLAGS=--xla_force_host_platform_device_count=2 (the CI
+    mesh job) the 2-shard cache runs real shard_map + all_gather; on a
+    1-device host it falls back to the bit-identical host loop."""
+    import jax
+
+    n_dev = len(jax.devices())
+    mesh = shard_mesh(2)
+    assert (mesh is None) == (n_dev < 2)
+    kv = ShardedPagedKVCache(hbm_pages=8, page_size=4, n_shards=2)
+    kv.register_request(0, list(range(64)))
+    kv.touch_batch([(0, j) for j in range(16)])
+    assert kv.last_scan.used_shard_map == (n_dev >= 2)
+    assert kv.bulk_refreshes >= 1
+
+
+def test_mesh_shard_mismatch_rejected():
+    mesh = shard_mesh(1)
+    with pytest.raises(ValueError):
+        ShardedPagedKVCache(n_shards=2, mesh=mesh)
+
+
+# --------------------------------------------------------------------------- #
+# serving engine over the sharded backend                                     #
+# --------------------------------------------------------------------------- #
+
+def test_engine_sharded_scalar_parity():
+    """Null-model engines over the sharded vs scalar cache produce
+    identical tokens AND identical page counters (mirrors
+    test_serving.py::test_engine_vec_scalar_parity)."""
+    from repro.serving.engine import ServingEngine
+
+    def workload(eng, n_req=24, seed=0):
+        rng = np.random.default_rng(seed)
+        shared = list(rng.integers(0, 3000, size=48))
+        for r in range(n_req):
+            tail = list(rng.integers(0, 3000, size=int(rng.integers(8, 32))))
+            eng.submit(shared[:int(rng.integers(0, 48))] + tail,
+                       max_new_tokens=4)
+        return eng.run_until_idle()
+
+    engines = {kv: ServingEngine(None, None, max_batch=8, page_size=8,
+                                 hbm_pages=24, kv=kv, reread_window=2,
+                                 shards=2)
+               for kv in ("sharded", "scalar")}
+    done = {kv: workload(e) for kv, e in engines.items()}
+    gen = {kv: [(r.req_id, tuple(r.generated)) for r in sorted(
+        ds, key=lambda r: r.req_id)] for kv, ds in done.items()}
+    assert gen["sharded"] == gen["scalar"]
+    assert (engines["sharded"].pages.stats.parity_tuple()
+            == engines["scalar"].pages.stats.parity_tuple())
+    assert engines["sharded"].pages.stats.registry_scans == 0
+    assert engines["sharded"].pages.bulk_refreshes >= 1
+
+
+def test_engine_rejects_unknown_kv_backend():
+    from repro.serving.engine import ServingEngine
+
+    with pytest.raises(ValueError):
+        ServingEngine(None, None, kv="magic")

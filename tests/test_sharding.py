@@ -112,3 +112,28 @@ def test_gemma_mqa_kv_fallback():
     wk = sh["dense_layers"]["attn"]["wk"].spec
     # (L, d, kv=1, hd=256): kv dim must NOT be sharded
     assert wk[2] is None
+
+
+def test_divisibility_fallback_warns_exactly_once(caplog):
+    """The replicate fallback logs ONE warning per distinct
+    (dim, axes, size) — not one per layer, not zero: gemma's single KV
+    head (1 vs model=16) appears in every attention block but must
+    surface exactly once, and a repeat run adds nothing."""
+    import logging
+
+    cfg = get_config("gemma-2b")
+    model = build_model(cfg)
+    params = model.param_specs()
+    pt.reset_fallback_warnings()
+    with caplog.at_level(logging.WARNING, logger=pt.log.name):
+        pt.params_shardings(params, MESH, cfg)
+    kv_head = [r for r in caplog.records
+               if "dim 1 does not divide" in r.getMessage()
+               and "'model'" in r.getMessage()]
+    assert len(kv_head) == 1, [r.getMessage() for r in caplog.records]
+    n_first = len(caplog.records)
+    assert n_first >= 1
+    with caplog.at_level(logging.WARNING, logger=pt.log.name):
+        pt.params_shardings(params, MESH, cfg)   # dedup across calls
+    assert len(caplog.records) == n_first
+    pt.reset_fallback_warnings()
