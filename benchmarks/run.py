@@ -19,8 +19,9 @@ def main(argv=None) -> None:
                     help="paper-scale trial counts (slower)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-scale CI subset: Table 1 at reduced scale "
-                         "plus the serving load case (exercises the "
-                         "serving hot path on every PR)")
+                         "plus the serving load case and the MoE "
+                         "expert-serving case (exercises both serving "
+                         "hot paths on every PR)")
     ap.add_argument("--skip-roofline", action="store_true",
                     help="skip the dry-run-artifact roofline table")
     ap.add_argument("--scale", type=float, default=1.0,
@@ -43,6 +44,7 @@ def main(argv=None) -> None:
     if args.smoke:
         table1.run(n_trials=1, trace_scale=0.2)
         cases.case_serving(smoke=True, shards=shards)
+        cases.case_moe(smoke=True)
         print(f"\ntotal benchmark wall time: {time.time() - t0:.1f}s")
         return
 
@@ -53,6 +55,7 @@ def main(argv=None) -> None:
     cases.case_ml()
     cases.case_hft()
     cases.case_serving(shards=shards)
+    cases.case_moe()
     kernel_bench.run()
 
     if not args.skip_roofline:

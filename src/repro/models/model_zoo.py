@@ -109,6 +109,10 @@ class Model:
     prefill: Callable               # (params, batch) -> (last_logits, cache)
     decode_step: Callable           # (params, batch, cache) -> (logits, cache)
     init_cache: Callable            # (batch, max_len) -> cache
+    #: MoE archs only: decode_step that also returns the stacked router
+    #: top-k indices ((n_moe_layers, B, K) int32) — the PFCS
+    #: expert-cache feed (repro.serving, DESIGN.md §7)
+    decode_step_router: Optional[Callable] = None
 
     # -- dry-run input specs ------------------------------------------------ #
 
@@ -155,6 +159,9 @@ def build_model(cfg: ArchConfig) -> Model:
             prefill=lambda p, b: tfm.prefill(p, cfg, b),
             decode_step=lambda p, b, c: tfm.decode_step(p, cfg, b, c),
             init_cache=lambda b, m: tfm.init_cache(cfg, b, m),
+            decode_step_router=(
+                (lambda p, b, c: tfm.decode_step_router(p, cfg, b, c))
+                if cfg.moe is not None else None),
         )
     if fam == "audio":
         return Model(

@@ -210,7 +210,9 @@ def _stacked_layer_params(params, cfg):
 
 
 def _attn_layer_decode(x, lp, cfg, k_cache, v_cache, cache_len, positions):
-    """One transformer layer, one token.  Caches: (B,S,KV,hd)."""
+    """One transformer layer, one token.  Caches: (B,S,KV,hd).  For MoE
+    layers the router's top-k expert indices ride along ((B,K) int32,
+    the PFCS expert-cache feed); ``None`` for dense layers."""
     h = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
     q, k, v = attn.qkv_project(h, lp["attn"], cfg, positions)
     # write new k/v at cache_len
@@ -223,12 +225,14 @@ def _attn_layer_decode(x, lp, cfg, k_cache, v_cache, cache_len, positions):
     o = attn.decode_attention(q, k_cache, v_cache, cache_len + 1)
     x = x + attn.out_project(o, lp["attn"])
     h = rms_norm(x, lp["ln_ffn"], cfg.norm_eps)
+    top = None
     if "moe" in lp:
-        f, _ = moe_mod.apply_moe(h, lp["moe"], cfg)
+        f, aux = moe_mod.apply_moe(h, lp["moe"], cfg)
         x = x + f
+        top = aux["router_top_idx"]           # (T=B·1, K)
     else:
         x = x + apply_ffn(h, lp["ffn"], cfg.act)
-    return x, k_cache, v_cache
+    return x, k_cache, v_cache, top
 
 
 def _mla_layer_decode(x, lp, cfg, latent_c, rope_c, cache_len, positions,
@@ -239,45 +243,56 @@ def _mla_layer_decode(x, lp, cfg, latent_c, rope_c, cache_len, positions,
         latent_scale=latent_s)
     x = x + a
     h = rms_norm(x, lp["ln_ffn"], cfg.norm_eps)
+    top = None
     if "moe" in lp:
-        f, _ = moe_mod.apply_moe(h, lp["moe"], cfg)
+        f, aux = moe_mod.apply_moe(h, lp["moe"], cfg)
         x = x + f
+        top = aux["router_top_idx"]
     else:
         x = x + apply_ffn(h, lp["ffn"], cfg.act)
-    return x, latent_c, rope_c, latent_s
+    return x, latent_c, rope_c, latent_s, top
 
 
-def decode_step(params: Params, cfg, batch: Dict, cache: Dict
-                ) -> Tuple[jnp.ndarray, Dict]:
-    """batch: {'tokens': (B,1)}; returns (logits (B,1,V), new cache)."""
+def _decode_step(params: Params, cfg, batch: Dict, cache: Dict,
+                 with_router: bool):
+    """Shared decode body; ``with_router`` additionally stacks the MoE
+    layers' router top-k indices ((n_moe_layers, B, K) int32) as a scan
+    output — a trace-time constant, so the two public entry points jit
+    to separate programs with no runtime branch."""
     x = embed_tokens(batch["tokens"], params["embed"])
     cache_len = cache["len"]
     positions = cache_len[:, None]
     n_dense = _stacked_layer_params(params, cfg)
+    routers: list = []
 
     if cfg.mla is not None:
         int8 = cfg.kv_cache_dtype == "int8"
 
-        def body(x, inp):
-            if int8:
-                lp, lat, rp, ls = inp
-            else:
-                (lp, lat, rp), ls = inp, None
-            x, lat, rp, ls = _mla_layer_decode(x, lp, cfg, lat, rp, cache_len,
-                                               positions, ls)
-            return x, ((lat, rp, ls) if int8 else (lat, rp))
+        def make_body(collect):
+            def body(x, inp):
+                if int8:
+                    lp, lat, rp, ls = inp
+                else:
+                    (lp, lat, rp), ls = inp, None
+                x, lat, rp, ls, top = _mla_layer_decode(
+                    x, lp, cfg, lat, rp, cache_len, positions, ls)
+                out = (lat, rp, ls) if int8 else (lat, rp)
+                return x, (out + (top,) if collect else out)
+            return body
 
         new_lat, new_rp, new_ls = [], [], []
 
-        def run(stack, lat_sl, rp_sl, ls_sl):
+        def run(stack, lat_sl, rp_sl, ls_sl, collect=False):
             nonlocal x
             xs = (stack, lat_sl, rp_sl, ls_sl) if int8 else \
                 (stack, lat_sl, rp_sl)
-            x, ys = scan_or_unroll(body, x, xs, cfg.unroll)
+            x, ys = scan_or_unroll(make_body(collect), x, xs, cfg.unroll)
             new_lat.append(ys[0])
             new_rp.append(ys[1])
             if int8:
                 new_ls.append(ys[2])
+            if collect:
+                routers.append(ys[-1])
 
         ls_all = cache.get("latent_scale")
         if "dense_layers" in params:
@@ -287,37 +302,64 @@ def decode_step(params: Params, cfg, batch: Dict, cache: Dict
         if "moe_layers" in params:
             run(params["moe_layers"], cache["latent"][n_dense:],
                 cache["rope"][n_dense:],
-                ls_all[n_dense:] if int8 else None)
+                ls_all[n_dense:] if int8 else None, collect=with_router)
         cache = {"latent": jnp.concatenate(new_lat, 0),
                  "rope": jnp.concatenate(new_rp, 0),
                  "len": cache_len + 1}
         if int8:
             cache["latent_scale"] = jnp.concatenate(new_ls, 0)
     else:
-        def body(x, inp):
-            lp, kc, vc = inp
-            x, kc, vc = _attn_layer_decode(x, lp, cfg, kc, vc, cache_len,
-                                           positions)
-            return x, (kc, vc)
+        def make_body(collect):
+            def body(x, inp):
+                lp, kc, vc = inp
+                x, kc, vc, top = _attn_layer_decode(x, lp, cfg, kc, vc,
+                                                    cache_len, positions)
+                return x, ((kc, vc, top) if collect else (kc, vc))
+            return body
+
         new_k, new_v = [], []
         if "dense_layers" in params:
             x, (k0, v0) = scan_or_unroll(
-                body, x, (params["dense_layers"],
-                          cache["k"][:n_dense], cache["v"][:n_dense]),
+                make_body(False), x,
+                (params["dense_layers"],
+                 cache["k"][:n_dense], cache["v"][:n_dense]),
                 cfg.unroll)
             new_k.append(k0)
             new_v.append(v0)
         if "moe_layers" in params:
-            x, (k1, v1) = scan_or_unroll(
-                body, x, (params["moe_layers"],
-                          cache["k"][n_dense:], cache["v"][n_dense:]),
+            x, ys = scan_or_unroll(
+                make_body(with_router), x,
+                (params["moe_layers"],
+                 cache["k"][n_dense:], cache["v"][n_dense:]),
                 cfg.unroll)
-            new_k.append(k1)
-            new_v.append(v1)
+            new_k.append(ys[0])
+            new_v.append(ys[1])
+            if with_router:
+                routers.append(ys[2])
         cache = {"k": jnp.concatenate(new_k, 0),
                  "v": jnp.concatenate(new_v, 0),
                  "len": cache_len + 1}
-    return _logits(x, params, cfg), cache
+    logits = _logits(x, params, cfg)
+    if not with_router:
+        return logits, cache
+    b, k = batch["tokens"].shape[0], (cfg.moe.top_k if cfg.moe else 0)
+    router = (jnp.concatenate(routers, 0) if routers
+              else jnp.zeros((0, b, k), jnp.int32))
+    return logits, cache, router
+
+
+def decode_step(params: Params, cfg, batch: Dict, cache: Dict
+                ) -> Tuple[jnp.ndarray, Dict]:
+    """batch: {'tokens': (B,1)}; returns (logits (B,1,V), new cache)."""
+    return _decode_step(params, cfg, batch, cache, with_router=False)
+
+
+def decode_step_router(params: Params, cfg, batch: Dict, cache: Dict
+                       ) -> Tuple[jnp.ndarray, Dict, jnp.ndarray]:
+    """``decode_step`` that also returns the stacked MoE router top-k
+    indices ((n_moe_layers, B, K) int32) — the PFCS expert-cache feed
+    (``repro.serving.expert_cache``, DESIGN.md §7)."""
+    return _decode_step(params, cfg, batch, cache, with_router=True)
 
 
 def _attn_layer_prefill(x, lp, cfg, positions, moe_layer):

@@ -18,23 +18,31 @@ Public entry points (documented with runnable examples in docs/api.md):
   * :class:`ServingEngine`          — continuous-batching engine over
     any of the caches; :meth:`ServingEngine.submit` /
     :meth:`ServingEngine.step` drive the request lifecycle
-  * :class:`ExpertCache`            — MoE expert-weight cache with
-    co-activation prefetch
+  * :class:`ExpertCache`            — scalar MoE expert-weight cache
+    with co-activation prefetch (the bit-exact oracle; per-activation
+    §4.2 scans)
+  * :class:`VectorizedExpertCache`  — array expert residency + bulk
+    table-driven co-fire discovery (DESIGN.md §7, the MoE serving hot
+    path; ``ServingEngine`` takes it with ``moe="vec"``)
 
 The vectorized and sharded caches must reproduce the oracle's
-``PageStats`` counters bit-for-bit (``tests/test_serving.py``,
-``tests/test_serving_sharded.py``), mirroring the engine-vs-oracle
+``PageStats`` / ``ExpertCacheStats`` counters bit-for-bit
+(``tests/test_serving.py``, ``tests/test_serving_sharded.py``,
+``tests/test_serving_moe.py``), mirroring the engine-vs-oracle
 discipline of ``tests/test_engine.py``.
 """
 
 from .engine import Request, ServingEngine
-from .expert_cache import ExpertCache, ExpertCacheStats
+from .expert_cache import (EXPERT_PARITY_COUNTERS, ExpertCache,
+                           ExpertCacheStats)
+from .expert_cache_vec import VectorizedExpertCache
 from .kv_cache import PARITY_COUNTERS, PagedKVCache, PageStats
 from .kv_cache_sharded import ShardedPagedKVCache
 from .kv_cache_vec import VectorizedPagedKVCache
 
 __all__ = [
     "Request", "ServingEngine", "ExpertCache", "ExpertCacheStats",
+    "EXPERT_PARITY_COUNTERS", "VectorizedExpertCache",
     "PagedKVCache", "PageStats", "PARITY_COUNTERS",
     "ShardedPagedKVCache", "VectorizedPagedKVCache",
 ]

@@ -24,6 +24,23 @@ Three cache backends (``kv=``):
     discovery under ``shard_map`` (DESIGN.md §6); still bit-exact
     against the scalar oracle on every counter.
 
+Two expert-cache backends for MoE workloads (``moe=``, default off):
+
+  * ``moe="vec"`` — :class:`~repro.serving.expert_cache_vec.
+    VectorizedExpertCache`: array residency + table-driven bulk co-fire
+    discovery; the whole decode step's router output is one
+    ``activate_batch`` call (DESIGN.md §7).
+  * ``moe="scalar"`` — the oracle :class:`~repro.serving.expert_cache.
+    ExpertCache`; bit-exact same counters, one §4.2 scan per activated
+    expert.
+
+Router feeds are dual-mode: with ``model=None`` the engine synthesizes
+a deterministic co-activation-structured router schedule (the
+load-generator mode ``benchmarks.cases.case_moe`` drives); with a MoE
+model from the zoo, each decode step's real top-k sets flow straight
+from ``models/moe.py`` ``apply_moe`` router outputs into the expert
+cache (``Model.decode_step_router``).
+
 On-device compute is the model's ``prefill`` / ``decode_step``; pass
 ``model=None`` to run the engine as a pure page-management load
 generator (deterministic stub tokens) — the mode the serving benchmark
@@ -41,6 +58,8 @@ from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from .expert_cache import ExpertCache
+from .expert_cache_vec import VectorizedExpertCache
 from .kv_cache import PagedKVCache
 from .kv_cache_sharded import ShardedPagedKVCache
 from .kv_cache_vec import VectorizedPagedKVCache
@@ -68,7 +87,11 @@ class ServingEngine:
                  max_seq: int = 512, page_size: int = 16,
                  hbm_pages: int = 256, greedy: bool = True,
                  kv: str = "vec", prefetch_budget: int = 4,
-                 reread_window: int = 1, shards: int = 2, mesh="auto"):
+                 reread_window: int = 1, shards: int = 2, mesh="auto",
+                 moe: Optional[str] = None, moe_experts: int = 64,
+                 moe_slots: int = 16, moe_topk: int = 4,
+                 moe_prefetch_budget: int = 4, moe_groups: int = 16,
+                 moe_seed: int = 0):
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -88,12 +111,57 @@ class ServingEngine:
         else:
             raise ValueError(f"kv must be 'vec', 'scalar' or 'sharded', "
                              f"got {kv!r}")
+        # MoE expert-weight tier (DESIGN.md §7); router feed is the real
+        # model router when the model is a MoE arch, a deterministic
+        # synthetic schedule in load-generator mode
+        model_moe = getattr(getattr(model, "cfg", None), "moe", None)
+        if model_moe is not None:
+            moe_experts, moe_topk = model_moe.n_experts, model_moe.top_k
+        if moe is None:
+            self.experts: Optional[ExpertCache] = None
+        elif moe == "vec":
+            self.experts = VectorizedExpertCache(
+                moe_experts, hbm_slots=moe_slots,
+                prefetch_budget=moe_prefetch_budget)
+        elif moe == "scalar":
+            self.experts = ExpertCache(
+                moe_experts, hbm_slots=moe_slots,
+                prefetch_budget=moe_prefetch_budget)
+        else:
+            raise ValueError(f"moe must be None, 'vec' or 'scalar', "
+                             f"got {moe!r}")
+        if (self.experts is not None and model is not None
+                and getattr(model, "decode_step_router", None) is None):
+            raise ValueError(
+                "moe= needs router output: pass a MoE model (one with "
+                "decode_step_router) or model=None for the synthetic-"
+                "router load-generator mode")
+        if self.experts is not None and model is None:
+            # synthetic router: a fixed pool of co-activation groups with
+            # zipf-skewed expert popularity, drawn deterministically per
+            # (request, position) — identical across cache backends
+            rng = np.random.default_rng(moe_seed)
+            pop = 1.0 / np.arange(1, moe_experts + 1, dtype=np.float64)
+            pop /= pop.sum()
+            self._moe_groups = [
+                tuple(int(e) for e in rng.choice(
+                    moe_experts, size=min(moe_topk, moe_experts),
+                    replace=False, p=pop))
+                for _ in range(max(1, moe_groups))]
+        else:
+            self._moe_groups = None
         self.queue: List[Request] = []
         self.slots: List[Optional[Request]] = [None] * max_batch
+        self._router_decode = (self.experts is not None
+                               and model is not None
+                               and getattr(model, "decode_step_router", None)
+                               is not None)
         if model is not None:
             import jax
             self.cache = model.init_cache(max_batch, max_seq)
-            self._decode = jax.jit(model.decode_step)
+            self._decode = jax.jit(model.decode_step_router
+                                   if self._router_decode
+                                   else model.decode_step)
         else:                       # page-management load-generator mode
             self.cache = None
             self._decode = None
@@ -138,9 +206,12 @@ class ServingEngine:
         b = self.max_batch
         toks = np.zeros((b, 1), np.int32)
         toks[i, 0] = token
-        logits, self.cache = self._decode(self.params,
-                                          {"tokens": jnp.asarray(toks)},
-                                          self.cache)
+        out = self._decode(self.params, {"tokens": jnp.asarray(toks)},
+                           self.cache)
+        # router-decode models return a third router output; prefill
+        # routing is not observed (single-slot prefill is the same
+        # simplification as the prefill loop itself)
+        logits, self.cache = out[0], out[1]
         # only slot i's cache_len must advance: rebuild len vector
         ln = np.array(self.cache["len"], copy=True)
         for j in range(b):
@@ -153,6 +224,15 @@ class ServingEngine:
         """Deterministic pseudo-decode for model=None mode (independent
         of cache state, so vec/scalar engine runs stay comparable)."""
         return (req.req_id * 7919 + len(req.generated) * 104_729) % _STUB_VOCAB
+
+    def _stub_expert_set(self, req: Request):
+        """Deterministic synthetic router draw for model=None MoE mode:
+        each (request, position) picks one of the engine's co-activation
+        groups, so the workload has learnable co-fire structure and is
+        identical across expert-cache backends."""
+        g = (req.req_id * 7919 + len(req.generated) * 104_729) \
+            % len(self._moe_groups)
+        return self._moe_groups[g]
 
     def step(self) -> Dict[str, Any]:
         """One engine tick: admit, decode one token for every live slot.
@@ -176,6 +256,7 @@ class ServingEngine:
         if touches:
             self.pages.touch_batch(touches)
 
+        router = None
         if self.model is not None:
             import jax.numpy as jnp
             b = self.max_batch
@@ -183,13 +264,28 @@ class ServingEngine:
             for i, req in live:
                 toks[i, 0] = (req.generated[-1] if req.generated else
                               (req.prompt[-1] if req.prompt else 0))
-            logits, self.cache = self._decode(self.params,
-                                              {"tokens": jnp.asarray(toks)},
-                                              self.cache)
+            out = self._decode(self.params, {"tokens": jnp.asarray(toks)},
+                               self.cache)
+            logits, self.cache = out[0], out[1]
+            if self._router_decode:
+                router = np.asarray(out[2])       # (n_moe_layers, B, K)
             lg = np.asarray(logits)
             nxt_of = {i: int(np.argmax(lg[i, -1])) for i, _ in live}
         else:
             nxt_of = {i: self._stub_token(r) for i, r in live}
+
+        if self.experts is not None:
+            # the whole step's router output — every live slot, every MoE
+            # layer — is ONE observe_routing + ONE activate_batch call;
+            # with the vectorized cache that means zero per-expert
+            # registry scans (DESIGN.md §7)
+            if router is not None:
+                sets = [[int(e) for e in router[l, i]]
+                        for i, _ in live for l in range(router.shape[0])]
+            else:
+                sets = [self._stub_expert_set(r) for _, r in live]
+            self.experts.observe_routing(sets)
+            self.experts.activate_batch(sets)
 
         now = time.monotonic()
         for i, req in live:
@@ -202,7 +298,10 @@ class ServingEngine:
                 self.pages.release_request(req.req_id)
                 self.slots[i] = None
         self.steps += 1
-        return {"live": len(live), "page_stats": self.pages.stats}
+        out = {"live": len(live), "page_stats": self.pages.stats}
+        if self.experts is not None:
+            out["expert_stats"] = self.experts.stats
+        return out
 
     def run_until_idle(self, max_steps: int = 10_000) -> List[Request]:
         done: List[Request] = []

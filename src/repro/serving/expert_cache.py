@@ -11,6 +11,13 @@ with e; those are prefetched host->HBM ahead of the expert all-to-all.
 Zero false positives (Theorem 1) means no wasted host->HBM transfers on
 unrelated experts — the transfers are the scarce resource when cold
 experts live off-chip.
+
+This scalar implementation is the bit-exact oracle for
+:class:`~repro.serving.expert_cache_vec.VectorizedExpertCache`
+(DESIGN.md §7): every ``EXPERT_PARITY_COUNTERS`` entry, every per-expert
+tier decision, the HBM LRU order, and the prefetch log must match under
+any interleaving of ``observe_routing`` / ``activate`` /
+``activate_batch`` (``tests/test_serving_moe.py``).
 """
 
 from __future__ import annotations
@@ -19,14 +26,22 @@ from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Dict, Iterable, List, Sequence, Set, Tuple
 
-import numpy as np
-
 from repro.core.assignment import PrimeAssigner
-from repro.core.composite import CompositeRegistry
+from repro.core.composite import (CompositeRegistry, Relationship,
+                                  encode_relationship)
 from repro.core.factorization import Factorizer
 from repro.core.primes import CacheLevel, HierarchicalPrimeAllocator
 
-__all__ = ["ExpertCache", "ExpertCacheStats"]
+__all__ = ["ExpertCache", "ExpertCacheStats", "EXPERT_PARITY_COUNTERS"]
+
+
+#: the counters both expert-cache implementations must agree on
+#: bit-for-bit (tests/test_serving_moe.py parity suite);
+#: ``registry_scans`` is excluded — it counts discovery *work* and
+#: differs by design between the scalar per-activation scan and the
+#: vectorized table-driven path.
+EXPERT_PARITY_COUNTERS = ("hits", "misses", "prefetches", "prefetch_hits",
+                          "evictions")
 
 
 @dataclass
@@ -36,15 +51,37 @@ class ExpertCacheStats:
     prefetches: int = 0
     prefetch_hits: int = 0
     evictions: int = 0
+    registry_scans: int = 0     # per-activation §4.2 divisibility scans
 
     @property
     def hit_rate(self) -> float:
         return self.hits / max(1, self.hits + self.misses)
 
+    @property
+    def prefetch_precision(self) -> float:
+        return self.prefetch_hits / max(1, self.prefetches)
+
+    def parity_tuple(self) -> Tuple[int, ...]:
+        """The counters the vectorized cache must reproduce exactly."""
+        return tuple(getattr(self, f) for f in EXPERT_PARITY_COUNTERS)
+
 
 class ExpertCache:
     def __init__(self, n_experts: int, hbm_slots: int,
                  prefetch_budget: int = 4, max_group: int = 8):
+        self._init_identity(n_experts, hbm_slots, prefetch_budget, max_group)
+        self.hbm: "OrderedDict[int, bool]" = OrderedDict()
+
+    def _init_identity(self, n_experts: int, hbm_slots: int,
+                       prefetch_budget: int, max_group: int) -> None:
+        """Expert identity, prime assignment, and co-activation registry —
+        shared with the array-state implementation
+        (``expert_cache_vec``), which replaces only the placement
+        structures and the discovery path."""
+        if n_experts < 1:
+            raise ValueError("n_experts must be >= 1")
+        if hbm_slots < 1:
+            raise ValueError("hbm_slots must be >= 1")
         self.n_experts = n_experts
         self.hbm_slots = hbm_slots
         self.prefetch_budget = prefetch_budget
@@ -55,15 +92,35 @@ class ExpertCache:
                                       self.registry)
         for e in range(n_experts):
             self.assigner.assign(e, CacheLevel.L2)
-        self.hbm: "OrderedDict[int, bool]" = OrderedDict()
         self.stats = ExpertCacheStats()
         self._seen_groups: Set[frozenset] = set()
+        #: every (source expert, prefetched expert) pair ever issued, in
+        #: order — the zero-false-positive audit trail (Theorem 1 tests)
+        self.prefetch_log: List[Tuple[int, int]] = []
 
     # ------------------------------------------------------------------ #
+    # co-activation registration                                          #
+    # ------------------------------------------------------------------ #
 
-    def observe_routing(self, expert_sets: Iterable[Sequence[int]]) -> None:
+    def observe_routing(self, expert_sets: Iterable[Sequence[int]]
+                        ) -> List[Relationship]:
         """Feed router top-k sets (e.g. aux['router_top_idx'] rows).
-        Each new co-activation group is registered once as a composite."""
+
+        Each new co-activation group is registered ONCE as a composite;
+        returns the relationships that are new to the registry, in
+        registration order (the vectorized cache maintains its co-fire
+        table incrementally from exactly this list).
+
+        Dedup happens at the *composite* level, not just on the raw
+        frozenset: the ``max_group`` cap means two distinct router sets
+        can collapse to the same capped group, and re-registering its
+        composite would orphan the old ``Relationship``, inflate prime
+        degrees, and bump the registry version (forcing the vectorized
+        cache into needless table rebuilds) — the same duplicate class
+        the chain-edge path dedupes
+        (``PagedKVCache._register_chain_edges``).
+        """
+        new: List[Relationship] = []
         for s in expert_sets:
             grp = frozenset(int(e) for e in s)
             if len(grp) < 2 or grp in self._seen_groups:
@@ -73,8 +130,44 @@ class ExpertCache:
             grp_l = sorted(grp)[: self.max_group]
             primes = {self.assigner.prime_of(e) for e in grp_l}
             primes.discard(None)
-            if len(primes) >= 2:
-                self.registry.register(primes, kind="coactivation")
+            if len(primes) < 2:
+                continue
+            # ALL chunks must be fresh (stricter than the chain-edge
+            # `any`, where pairs are always single-chunk): a capped
+            # top-k group spans several chunks, and a single colliding
+            # chunk would overwrite that composite's relationship
+            # mapping — orphaning the earlier group and reordering the
+            # §4.2 scan's discoveries, which is exactly the divergence
+            # the differential fuzz surfaced
+            fresh = all(
+                self.registry.relationship_of_composite(c) is None
+                for c in encode_relationship(sorted(primes)))
+            if fresh:
+                new.append(self.registry.register(primes,
+                                                  kind="coactivation"))
+        return new
+
+    def coactivated(self, e: int) -> Set[int]:
+        """The factorization-recovered co-fire set of expert e (§4.2 scan
+        + Algorithm 2 decode) — the deterministic ground truth every
+        prefetch decision must fall inside (Theorem 1: zero false
+        positives)."""
+        p = self.assigner.prime_of(int(e))
+        if p is None:
+            return set()
+        out: Set[int] = set()
+        for rel in self.registry.containing(p):
+            for q in rel.primes:
+                if q == p:
+                    continue
+                other = self.assigner.data_of(q)
+                if other is not None:
+                    out.add(other)
+        return out
+
+    # ------------------------------------------------------------------ #
+    # placement                                                           #
+    # ------------------------------------------------------------------ #
 
     def _evict(self) -> None:
         while len(self.hbm) > self.hbm_slots:
@@ -108,11 +201,28 @@ class ExpertCache:
             self._prefetch_coactivated(int(e))
         return tiers
 
+    def activate_batch(self, expert_sets: Sequence[Sequence[int]]
+                       ) -> List[Dict[int, str]]:
+        """Activate a whole decode step's router output (one top-k set
+        per token batch / MoE layer), in order.  The scalar
+        implementation simply loops ``activate`` (one §4.2 registry scan
+        per activated expert); the vectorized cache overrides this with
+        table-driven bulk discovery — the serving engine always goes
+        through this entry point."""
+        return [self.activate(s) for s in expert_sets]
+
     def _prefetch_coactivated(self, e: int) -> None:
         p = self.assigner.prime_of(e)
         if p is None:
             return
         budget = self.prefetch_budget
+        if budget <= 0:
+            # budget 0 disables prefetch outright (the LRU-expert
+            # baseline); the scan below used to run anyway and leak one
+            # prefetch per scanned relationship — regression-tested in
+            # tests/test_serving_moe.py
+            return
+        self.stats.registry_scans += 1
         for rel in self.registry.containing(p):
             for q in rel.primes:
                 if q == p:
@@ -122,6 +232,7 @@ class ExpertCache:
                     continue
                 self._insert(other, True)
                 self.stats.prefetches += 1
+                self.prefetch_log.append((e, other))
                 budget -= 1
                 if budget <= 0:
                     return

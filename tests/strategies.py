@@ -8,17 +8,21 @@ two layers:
      (seed + sizes) that expand into concrete workloads:
      :func:`build_kv_ops` / :func:`apply_kv_ops` for paged-KV request
      streams, :func:`drive_kv` (the classic serving parity driver),
-     :func:`trace_zoo` / :func:`adversarial_trace` for simulator
-     traces.  The ad-hoc randomized loops that used to live inline in
-     ``tests/test_serving.py`` / ``tests/test_engine.py`` now call
-     these.
+     :func:`build_expert_sets` / :func:`drive_expert` for router-driven
+     MoE expert workloads, :func:`trace_zoo` / :func:`adversarial_trace`
+     for simulator traces.  The ad-hoc randomized loops that used to
+     live inline in ``tests/test_serving.py`` / ``tests/test_engine.py``
+     now call these.
   2. **Hypothesis strategies** (via ``hypothesis_compat`` — clean SKIP
      when the package is absent) that sample the *specs*:
      :func:`kv_workload_specs` for serving-cache differential fuzzing
      (chain topologies with shared prefixes, 1-slot HBM, registry
-     drops, eviction-adversarial sweeps), :func:`trace_specs` for
-     engine traces, :func:`adversarial_stream_specs` for
-     recency-thrashing access streams.
+     drops, eviction-adversarial sweeps),
+     :func:`expert_workload_specs` for expert-cache fuzzing (skewed
+     router popularity, repeated-group / disjoint-partition schedules,
+     ``max_group`` overflow), :func:`trace_specs` for engine traces,
+     :func:`adversarial_stream_specs` for recency-thrashing access
+     streams.
 
 Sampling specs rather than raw streams keeps shrinking effective (a
 failing case minimizes to a tiny seed + sizes tuple) and lets the
@@ -40,6 +44,8 @@ __all__ = [
     "KVWorkloadSpec", "build_kv_ops", "apply_kv_ops", "drive_kv",
     "kv_workload_specs", "trace_zoo", "trace_specs", "make_trace",
     "adversarial_trace", "adversarial_stream_specs",
+    "ExpertWorkloadSpec", "build_expert_sets", "drive_expert",
+    "expert_workload_specs",
     "HAVE_HYPOTHESIS", "given", "settings", "st",
 ]
 
@@ -183,6 +189,99 @@ def kv_workload_specs():
         release=st.booleans(),
         drop_primes=st.booleans(),
         sweeps=st.sampled_from([0, 2]),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# MoE expert workloads (serving tier)                                         #
+# --------------------------------------------------------------------------- #
+
+@dataclass(frozen=True)
+class ExpertWorkloadSpec:
+    """Compact description of a router-driven expert workload; expanded
+    by :func:`build_expert_sets` into per-step batches of top-k sets."""
+
+    seed: int = 0
+    n_experts: int = 32
+    n_steps: int = 60
+    batch: int = 4                 # router sets per decode step
+    group_size: int = 4            # top-k draw size (> max_group hits the cap)
+    n_groups: int = 12             # co-activation pool size
+    zipf_a: float = 1.0            # expert-popularity skew of group draws
+    disjoint: bool = False         # adversarial: groups partition the experts
+    repeat_hot: bool = False       # adversarial: one group dominates
+    oversize_every: int = 0        # every k-th step adds a fresh oversized
+    #                                draw (cap-collision / dedup edges)
+
+
+def build_expert_sets(spec: ExpertWorkloadSpec) -> List[List[Tuple[int, ...]]]:
+    """Expand a spec into per-decode-step batches of router top-k sets.
+
+    The same concrete sets drive every cache implementation (expert ids
+    are absolute, not selectors: the expert universe is fixed at
+    construction), so two bit-equal caches see bit-equal streams.
+    """
+    rng = np.random.default_rng(spec.seed)
+    k = max(1, min(spec.group_size, spec.n_experts))
+    if spec.disjoint:
+        perm = rng.permutation(spec.n_experts)
+        pool = [tuple(int(e) for e in perm[i:i + k])
+                for i in range(0, spec.n_experts - k + 1, k)]
+        pool = pool[:max(1, spec.n_groups)] or [tuple(range(k))]
+    else:
+        pop = 1.0 / np.arange(1, spec.n_experts + 1) ** spec.zipf_a
+        pop /= pop.sum()
+        pool = [tuple(int(e) for e in rng.choice(
+            spec.n_experts, size=k, replace=False, p=pop))
+            for _ in range(max(1, spec.n_groups))]
+    steps: List[List[Tuple[int, ...]]] = []
+    for t in range(spec.n_steps):
+        sets = []
+        for _ in range(spec.batch):
+            if spec.repeat_hot and rng.integers(2) == 0:
+                sets.append(pool[0])
+            else:
+                sets.append(pool[int(rng.integers(len(pool)))])
+        if spec.oversize_every and t % spec.oversize_every == 0:
+            big = min(spec.n_experts, 2 * k + 1)
+            sets.append(tuple(int(e) for e in rng.choice(
+                spec.n_experts, size=big, replace=False)))
+        steps.append(sets)
+    return steps
+
+
+def drive_expert(ec, step_batches: Sequence[Sequence[Tuple[int, ...]]]
+                 ) -> List[Tuple]:
+    """Replay per-step router batches against one expert cache — each
+    step is ONE ``observe_routing`` + ONE ``activate_batch`` call, the
+    serving engine's exact calling convention; returns every per-set
+    tier decision (the differential-comparison payload)."""
+    tiers: List[Tuple] = []
+    for batch in step_batches:
+        ec.observe_routing(batch)
+        for t in ec.activate_batch(batch):
+            tiers.append(tuple(sorted(t.items())))
+    return tiers
+
+
+def expert_workload_specs():
+    """Strategy over expert workload specs, biased toward the parity
+    edges: skewed popularity, adversarial repeated-group and
+    disjoint-partition schedules, oversized draws that overflow
+    ``max_group`` (degenerate 1-slot HBM comes from the caller's cache
+    config)."""
+    return st.builds(
+        ExpertWorkloadSpec,
+        seed=st.integers(min_value=0, max_value=2**16),
+        n_experts=st.sampled_from([4, 16, 48]),
+        n_steps=st.integers(min_value=5, max_value=60),
+        batch=st.integers(min_value=1, max_value=6),
+        group_size=st.integers(min_value=2, max_value=12),
+        n_groups=st.sampled_from([2, 8, 24]),
+        zipf_a=st.sampled_from([0.0, 1.0, 1.6]),
+        disjoint=st.booleans(),
+        repeat_hot=st.booleans(),
+        oversize_every=st.sampled_from([0, 3]),
     )
 
 

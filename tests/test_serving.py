@@ -217,27 +217,28 @@ def test_shared_prefix_gcd_kernel_parity():
 
 def test_expert_cache_prefetch_beats_no_prefetch():
     """With structured co-activation, PFCS prefetch lifts the HBM hit rate
-    vs an identical cache without relationship knowledge."""
-    rng = np.random.default_rng(0)
-    E, slots = 64, 16
-    groups = [tuple(rng.choice(E, size=8, replace=False)) for _ in range(6)]
+    vs an identical cache without relationship knowledge.  The workload
+    comes from the shared expert-strategy builder (the same spec family
+    the differential fuzz in tests/test_serving_moe.py draws from)."""
+    from strategies import ExpertWorkloadSpec, build_expert_sets
+
+    spec = ExpertWorkloadSpec(seed=0, n_experts=64, n_steps=150, batch=2,
+                              group_size=8, n_groups=6)
+    batches = build_expert_sets(spec)
 
     def run(prefetch_budget):
-        ec = ExpertCache(E, hbm_slots=slots, prefetch_budget=prefetch_budget)
-        for g in groups:
-            ec.observe_routing([g])
-        for _ in range(300):
-            g = groups[int(rng.integers(len(groups)))]
-            # activation arrives expert-by-expert (the all-to-all schedule)
-            ec.activate([g[0]])
-            ec.activate(list(g[1:]))
+        ec = ExpertCache(spec.n_experts, hbm_slots=16,
+                         prefetch_budget=prefetch_budget)
+        for batch in batches:
+            ec.observe_routing(batch)
+            # activation arrives expert-by-expert (the all-to-all
+            # schedule): head first, then the co-fired tail
+            for g in batch:
+                ec.activate([g[0]])
+                ec.activate(list(g[1:]))
         return ec.stats.hit_rate
 
-    rng = np.random.default_rng(0)
-    with_pf = run(prefetch_budget=7)
-    rng = np.random.default_rng(0)
-    without = run(prefetch_budget=0)
-    assert with_pf > without
+    assert run(prefetch_budget=7) > run(prefetch_budget=0)
 
 
 # --------------------------------------------------------------------------- #

@@ -1,0 +1,303 @@
+"""MoE expert-serving tier: differential parity + router integration.
+
+Discipline (mirrors tests/test_serving_sharded.py): the scalar
+``ExpertCache`` is the bit-exact oracle; ``VectorizedExpertCache`` must
+reproduce every ``EXPERT_PARITY_COUNTERS`` entry, every per-set tier
+decision, the exact HBM LRU order, AND the full prefetch log — the
+(source, target) audit trail of Theorem 1's zero-false-positive claim —
+under ANY interleaving of ``observe_routing`` / ``activate`` /
+``activate_batch``, including 1-slot HBM, ``max_group`` overflow,
+duplicate/capped group re-registration, and prefetch-budget exhaustion.
+The same concrete router schedule (``strategies.build_expert_sets``)
+replays against both implementations.
+"""
+
+import numpy as np
+import pytest
+
+from strategies import (ExpertWorkloadSpec, build_expert_sets, drive_expert,
+                        expert_workload_specs, given, settings, st)
+from repro.serving.expert_cache import (EXPERT_PARITY_COUNTERS, ExpertCache,
+                                        ExpertCacheStats)
+from repro.serving.expert_cache_vec import VectorizedExpertCache
+
+
+def _differential(spec: ExpertWorkloadSpec, slots: int, budget: int,
+                  max_group: int = 8) -> None:
+    """Replay one spec against the oracle and the vectorized twin."""
+    batches = build_expert_sets(spec)
+    a = ExpertCache(spec.n_experts, hbm_slots=slots,
+                    prefetch_budget=budget, max_group=max_group)
+    b = VectorizedExpertCache(spec.n_experts, hbm_slots=slots,
+                              prefetch_budget=budget, max_group=max_group)
+    ta, tb = drive_expert(a, batches), drive_expert(b, batches)
+    assert ta == tb                                   # per-set tiers
+    for f in EXPERT_PARITY_COUNTERS:
+        assert getattr(a.stats, f) == getattr(b.stats, f), f
+    assert a.prefetch_log == b.prefetch_log           # Theorem-1 audit trail
+    assert list(a.hbm.items()) == list(b.hbm.items())  # exact LRU order
+    # the oracle scans the registry per activated expert (when prefetch
+    # is on); the vectorized cache must never scan on the hot path
+    if budget > 0 and a.stats.prefetches + a.stats.hits > 0:
+        assert a.stats.registry_scans > 0
+    assert b.stats.registry_scans == 0
+
+
+# --------------------------------------------------------------------------- #
+# property-based differential fuzz (hypothesis; clean SKIP without it)        #
+# --------------------------------------------------------------------------- #
+
+@given(spec=expert_workload_specs(),
+       slots=st.sampled_from([1, 2, 8, 32]),
+       budget=st.integers(min_value=0, max_value=4))
+@settings(max_examples=15, deadline=None)
+def test_differential_fuzz_property(spec, slots, budget):
+    """Any drawn router workload: both caches agree bit-for-bit —
+    tiers, parity counters, LRU order, prefetch log."""
+    _differential(spec, slots, budget)
+
+
+# deterministic pinned cases: the suite exercises the edge paths even
+# when hypothesis is not installed (tier-1 must not lose this coverage)
+_PINNED = [
+    # 1-slot HBM: every insert evicts
+    (ExpertWorkloadSpec(seed=3, n_experts=24, n_steps=40), 1, 3, 8),
+    # max_group overflow + oversized fresh draws (cap-collision dedup)
+    (ExpertWorkloadSpec(seed=5, n_experts=40, group_size=12,
+                        oversize_every=4), 8, 2, 4),
+    # adversarial repeated-group schedule (duplicate re-registration)
+    (ExpertWorkloadSpec(seed=7, n_experts=32, repeat_hot=True,
+                        n_groups=4), 4, 4, 8),
+    # adversarial disjoint-partition schedule, tight budget
+    (ExpertWorkloadSpec(seed=9, n_experts=36, disjoint=True,
+                        group_size=6), 6, 1, 8),
+    # prefetch-budget exhaustion churn: big groups through tiny HBM
+    (ExpertWorkloadSpec(seed=11, n_experts=16, group_size=9, batch=6), 2, 4, 8),
+]
+
+
+@pytest.mark.parametrize("spec,slots,budget,max_group", _PINNED,
+                         ids=["hbm1", "overflow", "repeat", "disjoint",
+                              "budget"])
+def test_differential_fuzz_pinned(spec, slots, budget, max_group):
+    _differential(spec, slots, budget, max_group)
+
+
+# --------------------------------------------------------------------------- #
+# the fuzz-surfaced scalar bug class: duplicate group registration            #
+# --------------------------------------------------------------------------- #
+
+def test_capped_duplicate_groups_register_once():
+    """Two distinct router sets that collapse to the same ``max_group``
+    cap used to re-register the composite — orphaning the first
+    ``Relationship``, inflating prime degrees, and bumping the registry
+    version (needless vectorized-table rebuilds).  Regression for the
+    dedup fix (mirrors the PR 2 chain-edge fix)."""
+    ec = ExpertCache(32, hbm_slots=8, max_group=4)
+    ec.observe_routing([(0, 1, 2, 3, 9)])
+    v = ec.registry.version
+    new = ec.observe_routing([(0, 1, 2, 3, 17)])      # caps to the same group
+    assert new == []
+    assert len(ec.registry) == 1
+    assert ec.registry.version == v                   # no orphaning mutation
+    p0 = ec.assigner.prime_of(0)
+    assert ec.registry.degree(p0) == 1                # degree not inflated
+    # the vectorized twin must see zero table invalidation from the dup
+    vec = VectorizedExpertCache(32, hbm_slots=8, max_group=4)
+    vec.observe_routing([(0, 1, 2, 3, 9)])
+    rows = vec.successor_rows()
+    vec.observe_routing([(0, 1, 2, 3, 17)])
+    vec.activate_batch([(0,)])
+    assert vec.successor_rows() == rows
+    assert vec.bulk_refreshes == 0
+
+
+def test_chunk_collision_across_distinct_groups_skipped():
+    """A multi-chunk group whose FIRST chunk coincides with a live
+    composite of a *different* group must not register: the shared
+    chunk's relationship mapping would be overwritten, reordering the
+    §4.2 scan's discoveries (the divergence the differential fuzz
+    originally surfaced)."""
+    ec = ExpertCache(48, hbm_slots=8, max_group=8)
+    big = tuple(range(8))                  # chunks into >= 2 composites
+    ec.observe_routing([big])
+    rel = ec.registry.relationship_of_composite(
+        ec.registry.composites_array()[0])
+    assert len(rel.composites) >= 2, "expected a multi-chunk group"
+    # a different group that shares the first chunk's prime subset
+    first_chunk_primes = sorted(
+        q for q in rel.primes
+        if rel.composites[0] % q == 0)
+    shared = [ec.assigner.data_of(q) for q in first_chunk_primes]
+    clash = tuple(shared) + (40,)          # same leading chunk, new tail
+    before = len(ec.registry)
+    assert ec.observe_routing([clash]) == []
+    assert len(ec.registry) == before
+
+
+def test_budget_zero_disables_prefetch_entirely():
+    """Regression: with ``prefetch_budget=0`` the scalar cache used to
+    run the §4.2 scan anyway and leak one prefetch per scanned
+    relationship — the LRU-expert baseline must issue NO transfers."""
+    for cls in (ExpertCache, VectorizedExpertCache):
+        ec = cls(16, hbm_slots=4, prefetch_budget=0)
+        ec.observe_routing([(0, 1, 2, 3)])
+        for _ in range(5):
+            ec.activate([0, 1, 2, 3])
+        assert ec.stats.prefetches == 0
+        assert ec.stats.registry_scans == 0
+        assert ec.prefetch_log == []
+
+
+def test_expert_cache_rejects_bad_config():
+    with pytest.raises(ValueError):
+        ExpertCache(8, hbm_slots=0)
+    with pytest.raises(ValueError):
+        ExpertCache(0, hbm_slots=4)
+    with pytest.raises(ValueError):
+        VectorizedExpertCache(8, hbm_slots=4, discover="magic")
+
+
+# --------------------------------------------------------------------------- #
+# discovery tables: incremental == bulk host == bulk Pallas kernels           #
+# --------------------------------------------------------------------------- #
+
+def test_cofire_table_backends_agree():
+    from repro.core.engine import successor_table
+
+    vec = VectorizedExpertCache(48, hbm_slots=8, prefetch_budget=3)
+    batches = build_expert_sets(ExpertWorkloadSpec(
+        seed=5, n_experts=48, group_size=10, oversize_every=3))
+    drive_expert(vec, batches)
+
+    inc = vec.successor_rows()
+    experts = range(vec.n_experts)
+    host = {k: v for k, v in successor_table(
+        vec.registry, vec.assigner, experts, discover="host").items() if v}
+    kern = {k: v for k, v in successor_table(
+        vec.registry, vec.assigner, experts, discover="kernel").items() if v}
+    assert inc == host == kern
+    # a bulk kernel refresh reproduces the incrementally-maintained table
+    vec.refresh_tables(discover="kernel")
+    assert vec.successor_rows() == inc
+    assert vec.bulk_refreshes == 1
+
+
+def test_out_of_band_prime_drop_forces_rebuild():
+    """An out-of-band registry mutation (Algorithm-1 prime recycling via
+    ``assigner.release`` drops an expert's relationships) must not be
+    masked by incremental maintenance: the next activation rebuilds in
+    bulk and parity with the oracle holds."""
+    from repro.core.primes import CacheLevel
+
+    a = ExpertCache(24, hbm_slots=6, prefetch_budget=2)
+    b = VectorizedExpertCache(24, hbm_slots=6, prefetch_budget=2)
+    for ec in (a, b):
+        ec.observe_routing([(0, 1, 2), (2, 3, 4), (5, 6, 7)])
+        ec.activate_batch([(0, 2), (5,)])
+        ec.assigner.release(2, CacheLevel.L2)          # drops 2's groups
+        ec.observe_routing([(8, 9, 10)])
+        ec.activate_batch([(0, 2), (8,)])
+    assert a.stats.parity_tuple() == b.stats.parity_tuple()
+    assert a.prefetch_log == b.prefetch_log
+    assert list(a.hbm.items()) == list(b.hbm.items())
+    assert b.bulk_refreshes >= 1
+
+
+# --------------------------------------------------------------------------- #
+# serving engine over the expert tier                                         #
+# --------------------------------------------------------------------------- #
+
+def test_engine_moe_load_generator_parity():
+    """Null-model engines over either expert-cache backend produce
+    identical tokens AND identical expert counters on the same synthetic
+    router workload (mirrors test_serving.py::test_engine_vec_scalar_
+    parity)."""
+    from repro.serving.engine import ServingEngine
+
+    def workload(eng, n_req=24, seed=0):
+        rng = np.random.default_rng(seed)
+        for r in range(n_req):
+            eng.submit(list(rng.integers(0, 3000,
+                                         size=int(rng.integers(8, 32)))),
+                       max_new_tokens=4)
+        return eng.run_until_idle()
+
+    engines = {m: ServingEngine(None, None, max_batch=8, page_size=8,
+                                hbm_pages=24, moe=m, moe_experts=32,
+                                moe_slots=8, moe_topk=4, moe_groups=12)
+               for m in ("vec", "scalar")}
+    done = {m: workload(e) for m, e in engines.items()}
+    gen = {m: [(r.req_id, tuple(r.generated)) for r in sorted(
+        ds, key=lambda r: r.req_id)] for m, ds in done.items()}
+    assert gen["vec"] == gen["scalar"]
+    ev, es = engines["vec"].experts, engines["scalar"].experts
+    assert ev.stats.parity_tuple() == es.stats.parity_tuple()
+    assert ev.prefetch_log == es.prefetch_log
+    assert ev.stats.registry_scans == 0
+    assert es.stats.registry_scans > 0
+    assert ev.stats.prefetches > 0                    # structure was learned
+
+
+def test_engine_rejects_unknown_moe_backend():
+    from repro.serving.engine import ServingEngine
+
+    with pytest.raises(ValueError):
+        ServingEngine(None, None, moe="magic")
+
+
+def test_engine_rejects_moe_with_routerless_model():
+    """A model without ``decode_step_router`` (dense / non-transformer
+    family) cannot feed the expert tier — reject at construction, not
+    with a TypeError mid-serving."""
+    from repro.configs import get_smoke
+    from repro.models import build_model
+    from repro.serving.engine import ServingEngine
+
+    model = build_model(get_smoke("gemma-2b"))         # dense: no router
+    with pytest.raises(ValueError):
+        ServingEngine(model, None, max_batch=2, max_seq=32, moe="vec")
+
+
+@pytest.mark.parametrize("arch", ["kimi-k2-1t-a32b", "deepseek-v2-236b"],
+                         ids=["attn", "mla"])
+def test_engine_real_router_prefetch_is_exact_cofire_set(arch):
+    """End-to-end real-router mode: a tiny MoE model's ``apply_moe``
+    top-k sets feed the expert cache through
+    ``Model.decode_step_router``, and every prefetched expert is inside
+    the factorization-recovered co-fire set of its trigger — the
+    Theorem 1 zero-false-positive check on live router traffic (kimi
+    covers the standard-attention decode scan, deepseek the MLA one)."""
+    import jax
+
+    from repro.configs import get_smoke
+    from repro.models import build_model
+    from repro.serving.engine import ServingEngine
+
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, max_batch=2, max_seq=64, page_size=8,
+                        moe="vec", moe_slots=4, moe_prefetch_budget=4)
+    assert eng.experts.n_experts == cfg.moe.n_experts
+    for i in range(3):
+        eng.submit(list(range(12)) + [20 + i], max_new_tokens=3)
+    done = eng.run_until_idle()
+    assert len(done) == 3
+    ec = eng.experts
+    assert ec.stats.hits + ec.stats.misses > 0        # router traffic flowed
+    assert ec.stats.prefetches > 0
+    for src, tgt in ec.prefetch_log:
+        assert tgt != src
+        assert tgt in ec.coactivated(src), (src, tgt)
+    assert ec.stats.registry_scans == 0
+
+
+def test_stats_hit_rate_and_precision_edges():
+    st_ = ExpertCacheStats()
+    assert st_.hit_rate == 0.0
+    assert st_.prefetch_precision == 0.0
+    st_.hits, st_.misses = 3, 1
+    st_.prefetches, st_.prefetch_hits = 4, 3
+    assert st_.hit_rate == 0.75
+    assert st_.prefetch_precision == 0.75
