@@ -443,9 +443,233 @@ def case_moe(smoke: bool = False, real_router: bool = None):
     return out
 
 
+def case_tenancy(smoke: bool = False):
+    """Multi-tenant QoS load benchmark: mixed-tenant traffic over the
+    coprime-namespace serving cache (DESIGN.md §8).
+
+    One engine serves three tenant classes at once — the regime where a
+    shared cache's placement is a fairness weapon:
+
+      * **hot** (tenant 0) — zipf-popular shared prefixes, many short
+        decodes: the tenant with cache-friendly structure to protect;
+      * **cold** (tenants 1..T-2) — sparse unique traffic;
+      * **scanner** (tenant T-1) — adversarial long-chain sweeps, the
+        LRU-thrash pattern that evicts everyone in a shared cache.
+
+    Every tenant submits the SAME total token demand, so the fairness
+    ratio — max/min per-tenant COMPLETION rate, each tenant's tokens
+    over its own first-submit -> last-completion span — reads
+    directly: a starved tenant finishes late and its rate drops
+    (tokens over total wall would be blind to starvation, since every
+    request eventually completes).
+
+    Asserts: tenanted vec == tenanted scalar bit-exact (global stats,
+    per-tenant stats, prefetch logs), ZERO cross-tenant prefetches
+    (the namespace isolation theorem, audited on the live log), the
+    isolation checker over the final registry, and quota occupancy
+    bounds.  Reports per-tenant hit rate / prefetch precision / TTFT,
+    the fairness ratio, and a quota-vs-shared protection A/B: the hot
+    tenant's hit rate with QoS quotas vs the same traffic through one
+    shared (untenanted) cache the scanner is free to thrash.
+    """
+    from repro.serving.engine import ServingEngine
+    from repro.serving.kv_cache_vec import VectorizedPagedKVCache
+    from repro.tenancy import TenantQoSConfig, TenantedVectorizedPagedKVCache
+
+    if smoke:
+        n_cold, hbm, max_batch = 2, 32, 16
+        hot_req, cold_req, scan_req = 12, 6, 8
+        hot_new, cold_new, scan_new = 8, 16, 12
+        scan_prompt, shared_tok = 192, 48
+    else:
+        n_cold, hbm, max_batch = 6, 128, 64
+        hot_req, cold_req, scan_req = 48, 8, 16
+        hot_new, cold_new, scan_new = 8, 48, 24
+        scan_prompt, shared_tok = 512, 96
+    T = n_cold + 2
+    hot, scanner = 0, T - 1
+    # hot tenant earns a weighted share; scanner gets the same share as
+    # a cold tenant — QoS is the contract, not the workload's appetite
+    cfg = TenantQoSConfig.weighted(hbm, [4] + [1] * n_cold + [1],
+                                   prefetch_budget=4)
+
+    def submit_all(eng):
+        """Round-robin mixed-tenant submission (identical across runs);
+        returns request -> tenant attribution."""
+        rng = np.random.default_rng(0)
+        groups = [list(rng.integers(0, 30_000, size=shared_tok))
+                  for _ in range(4)]
+        reqs = []
+        for _ in range(hot_req):           # zipf-hot shared prefixes
+            g = groups[min(int(rng.zipf(1.5)) - 1, 3)]
+            tail = list(rng.integers(0, 30_000,
+                                     size=int(rng.integers(16, 50))))
+            reqs.append((hot, g + tail, hot_new))
+        for t in range(1, 1 + n_cold):     # sparse unique traffic
+            for _ in range(cold_req):
+                reqs.append((t, list(rng.integers(0, 30_000,
+                                                  size=int(rng.integers(
+                                                      24, 80)))), cold_new))
+        for i in range(scan_req):          # adversarial long chains
+            base = 100_000 + i * scan_prompt
+            reqs.append((scanner, list(range(base, base + scan_prompt)),
+                         scan_new))
+        # round-robin interleave by tenant so every class is always live
+        by_t = {t: [r for r in reqs if r[0] == t] for t in range(T)}
+        tenant_of_req = {}
+        while any(by_t.values()):
+            for t in range(T):
+                if by_t[t]:
+                    tt, prompt, new = by_t[t].pop(0)
+                    rid = eng.submit(prompt, max_new_tokens=new, tenant=tt)
+                    tenant_of_req[rid] = tt
+        return tenant_of_req
+
+    def run(kv: str):
+        eng = ServingEngine(None, None, max_batch=max_batch, page_size=16,
+                            hbm_pages=hbm, kv=kv, prefetch_budget=4,
+                            reread_window=2, tenants=cfg)
+        t_of = submit_all(eng)
+        t0 = time.perf_counter()
+        done = eng.run_until_idle()
+        wall = time.perf_counter() - t0
+        toks = [0] * T
+        ttfts = [[] for _ in range(T)]
+        span_lo = [float("inf")] * T     # first submit .. last completion:
+        span_hi = [0.0] * T              # a starved tenant finishes LATE,
+        #                                  so its completion rate drops —
+        #                                  tokens/wall would be blind to
+        #                                  starvation (everyone completes)
+        for r in done:
+            t = t_of[r.req_id]
+            toks[t] += len(r.generated)
+            span_lo[t] = min(span_lo[t], r.submit_t)
+            span_hi[t] = max(span_hi[t], r.done_t or r.submit_t)
+            if r.first_token_t is not None:
+                ttfts[t].append(r.first_token_t - r.submit_t)
+        q = eng.pages.qos
+        return dict(
+            wall_s=wall,
+            completed=len(done),
+            tenant_tok_per_s=[tk / max(hi - lo, 1e-9)
+                              for tk, lo, hi in zip(toks, span_lo,
+                                                    span_hi)],
+            tenant_hit_rate=[s.hbm_hit_rate for s in q.tenant_stats],
+            tenant_pf_precision=[s.prefetch_hit_rate
+                                 for s in q.tenant_stats],
+            tenant_mean_ttft_ms=[float(np.mean(tt)) * 1e3 if tt else 0.0
+                                 for tt in ttfts],
+            tenant_evictions=[s.evictions for s in q.tenant_stats],
+            cross_tenant_prefetches=eng.pages.cross_tenant_prefetches(),
+            occupancy_ok=bool((q.occupancy <= q.quota).all()),
+            quota=[int(x) for x in q.quota],
+            parity=eng.pages.stats.parity_tuple(),
+            tenant_parity=[s.parity_tuple() for s in q.tenant_stats],
+            prefetch_log=tuple(eng.pages.prefetch_log),
+            registry_scans=eng.pages.stats.registry_scans,
+            _pages=eng.pages,
+        )
+
+    res = {"pfcs_vec": run("vec"), "pfcs_scalar": run("scalar")}
+
+    # tenanted vec is an implementation, not an estimator: bit-exact
+    # against the scalar oracle, globally AND per tenant
+    assert res["pfcs_vec"]["parity"] == res["pfcs_scalar"]["parity"], \
+        "tenanted vectorized cache diverged from the scalar oracle"
+    assert (res["pfcs_vec"]["tenant_parity"]
+            == res["pfcs_scalar"]["tenant_parity"]), \
+        "per-tenant stats diverged between vec and scalar"
+    assert (res["pfcs_vec"]["prefetch_log"]
+            == res["pfcs_scalar"]["prefetch_log"]), \
+        "tenanted caches issued different prefetches"
+    assert res["pfcs_vec"]["registry_scans"] == 0, \
+        "tenanted vectorized touch path performed a registry scan"
+    # the isolation theorem, on the live run: zero cross-tenant
+    # prefetches, every composite inside one tenant's blocks
+    for name in ("pfcs_vec", "pfcs_scalar"):
+        assert res[name]["cross_tenant_prefetches"] == 0, \
+            f"{name}: cross-tenant prefetch issued"
+        assert res[name]["occupancy_ok"], f"{name}: quota exceeded"
+    pages = res["pfcs_vec"].pop("_pages")
+    res["pfcs_scalar"].pop("_pages")
+    rep = pages.namespace.check_isolation(pages.registry,
+                                          pairwise_gcd=smoke)
+    assert rep.ok, f"isolation violated: {rep.violations}"
+
+    # fairness: max/min per-tenant completion rate (tokens over the
+    # tenant's first-submit -> last-completion span) under EQUAL token
+    # demand — a starved tenant finishes late and drags its rate down
+    rates = res["pfcs_vec"]["tenant_tok_per_s"]
+    fairness = max(rates) / max(min(rates), 1e-9)
+
+    # protection A/B: the hot working set vs the scanner, quota-confined
+    # cache vs one shared (untenanted) cache — same traffic pattern
+    def protection(tenanted: bool) -> float:
+        if tenanted:
+            kv = TenantedVectorizedPagedKVCache(
+                hbm_pages=8, page_size=4, prefetch_budget=0,
+                qos=TenantQoSConfig(2, (4, 4), (0, 0), (1, 1)))
+            kv.register_request(0, list(range(16)), tenant=0)
+            kv.register_request(1, list(range(100, 196)), tenant=1)
+        else:
+            kv = VectorizedPagedKVCache(hbm_pages=8, page_size=4,
+                                        prefetch_budget=0)
+            kv.register_request(0, list(range(16)))
+            kv.register_request(1, list(range(100, 196)))
+        hits = total = 0
+        for i in range(30):
+            hits += kv.touch(0, i % 4) == "hbm"
+            total += 1
+            kv.touch_batch([(1, j) for j in range(len(kv.chains[1]))])
+        return hits / total
+
+    hot_quota, hot_shared = protection(True), protection(False)
+
+    v = res["pfcs_vec"]
+    print("\n== Case study: multi-tenant QoS serving "
+          f"({T} tenants: 1 hot / {n_cold} cold / 1 scanner, {hbm} HBM "
+          f"pages, quotas {v['quota']}) ==")
+    print(f"  {'tenant':<10} {'tok/s':>8} {'hbm_hit%':>9} {'pf_prec%':>9} "
+          f"{'ttft_ms':>8} {'evicts':>7}")
+    names = (["hot"] + [f"cold{i}" for i in range(1, 1 + n_cold)]
+             + ["scanner"])
+    for t, nm in enumerate(names):
+        print(f"  {nm:<10} {v['tenant_tok_per_s'][t]:>8.0f} "
+              f"{v['tenant_hit_rate'][t]*100:>9.1f} "
+              f"{v['tenant_pf_precision'][t]*100:>9.1f} "
+              f"{v['tenant_mean_ttft_ms'][t]:>8.1f} "
+              f"{v['tenant_evictions'][t]:>7d}")
+    print(f"  fairness (max/min tok/s): {fairness:.3f}   "
+          f"cross-tenant prefetches: {v['cross_tenant_prefetches']}   "
+          f"isolation: {rep.n_composites} composites, "
+          f"{rep.coprime_pairs_checked} coprime pairs checked")
+    print(f"  hot-tenant protection vs scanner: hit "
+          f"{hot_quota*100:.1f}% under quotas vs {hot_shared*100:.1f}% "
+          f"shared LRU")
+
+    emit("case_tenancy.hot_hit_pct", v["tenant_hit_rate"][hot] * 100)
+    emit("case_tenancy.scanner_hit_pct",
+         v["tenant_hit_rate"][scanner] * 100)
+    emit("case_tenancy.fairness_ratio", fairness)
+    emit("case_tenancy.cross_tenant_prefetches",
+         v["cross_tenant_prefetches"])
+    emit("case_tenancy.protection_quota_hit_pct", hot_quota * 100)
+    emit("case_tenancy.protection_shared_hit_pct", hot_shared * 100)
+    out = {k: {kk: vv for kk, vv in r.items()
+               if kk not in ("parity", "tenant_parity", "prefetch_log")}
+           for k, r in res.items()}
+    out.update(fairness_ratio=fairness, tenant_names=names,
+               isolation_composites=rep.n_composites,
+               coprime_pairs_checked=rep.coprime_pairs_checked,
+               protection=dict(quota_hit=hot_quota, shared_hit=hot_shared))
+    save_json("case_tenancy", out)
+    return out
+
+
 if __name__ == "__main__":
     case_db()
     case_ml()
     case_hft()
     case_serving()
     case_moe()
+    case_tenancy()

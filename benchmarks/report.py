@@ -68,7 +68,8 @@ def roofline_table():
 
 def bench_tables():
     for name in ("table1", "fig2a", "fig2b", "case_db", "case_ml",
-                 "case_hft", "case_serving", "case_moe", "kernel_bench"):
+                 "case_hft", "case_serving", "case_moe", "case_tenancy",
+                 "kernel_bench"):
         p = BENCH / f"{name}.json"
         if p.exists():
             print(f"### bench:{name}\n```json")

@@ -19,9 +19,10 @@ def main(argv=None) -> None:
                     help="paper-scale trial counts (slower)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-scale CI subset: Table 1 at reduced scale "
-                         "plus the serving load case and the MoE "
-                         "expert-serving case (exercises both serving "
-                         "hot paths on every PR)")
+                         "plus the serving load case, the MoE "
+                         "expert-serving case, and the multi-tenant QoS "
+                         "case (exercises every serving hot path on "
+                         "every PR)")
     ap.add_argument("--skip-roofline", action="store_true",
                     help="skip the dry-run-artifact roofline table")
     ap.add_argument("--scale", type=float, default=1.0,
@@ -45,6 +46,7 @@ def main(argv=None) -> None:
         table1.run(n_trials=1, trace_scale=0.2)
         cases.case_serving(smoke=True, shards=shards)
         cases.case_moe(smoke=True)
+        cases.case_tenancy(smoke=True)
         print(f"\ntotal benchmark wall time: {time.time() - t0:.1f}s")
         return
 
@@ -56,6 +58,7 @@ def main(argv=None) -> None:
     cases.case_hft()
     cases.case_serving(shards=shards)
     cases.case_moe()
+    cases.case_tenancy()
     kernel_bench.run()
 
     if not args.skip_roofline:

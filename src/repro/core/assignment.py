@@ -99,6 +99,12 @@ class PrimeAssigner:
         self.tracker = tracker if tracker is not None else AccessTracker()
         self.recycle_fraction = recycle_fraction
         self.stats = AssignmentStats()
+        #: bumped whenever a data->prime binding is destroyed (release /
+        #: recycling) — consumers caching prime-derived state (e.g. the
+        #: vectorized cache's chain-composite chunks) key on this to
+        #: notice that a cached prime may since have been recycled and
+        #: reassigned to a different element
+        self.epoch = 0
         # bidirectional maps, per level (Listing 1 data_to_prime/prime_to_data)
         self._data_to_prime: Dict[int, Dict[DataID, int]] = {l: {} for l in CacheLevel.ALL}
         self._prime_to_data: Dict[int, Dict[int, DataID]] = {l: {} for l in CacheLevel.ALL}
@@ -171,6 +177,7 @@ class PrimeAssigner:
         p = self._data_to_prime[level].pop(d, None)
         if p is None:
             return
+        self.epoch += 1
         self._prime_to_data[level].pop(p, None)
         self.registry.drop_prime(p)
         self.allocator.free(self.allocator.level_of_prime(p), p)

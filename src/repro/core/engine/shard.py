@@ -52,22 +52,13 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.sharding.stripes import BlockStripes
+
 from ..composite import encode_relationship
 from ..primes import CacheLevel, LEVEL_PRIME_RANGES
 
 __all__ = ["PrimeSpacePartition", "shard_mesh", "sharded_successor_table",
            "ShardScanReport"]
-
-#: per-level value-block width caps, sized so a block holds on the order
-#: of 10-100 primes near the level's range start (prime gaps ~ ln p) —
-#: ownership then stripes at the granularity real workloads allocate at,
-#: instead of one shard swallowing the whole ascending-allocation prefix
-_BLOCK_CAP = {
-    CacheLevel.L1: 64,
-    CacheLevel.L2: 512,
-    CacheLevel.L3: 4_096,
-    CacheLevel.MEM: 1 << 16,
-}
 
 
 class PrimeSpacePartition:
@@ -75,44 +66,32 @@ class PrimeSpacePartition:
 
     Each bounded level range ``(lo, hi)`` is split into contiguous value
     blocks of width ``min((hi - lo + 1) // (n_shards * stripes_per_shard),
-    cap)`` (caps per level, see ``_BLOCK_CAP``); block ``k`` belongs to
-    shard ``k % n_shards``.  The unbounded MEM range uses the fixed cap
-    width.  ``n_shards == 1`` degenerates to "shard 0 owns everything"
-    (the single-device mesh case).
+    cap)``; block ``k`` belongs to shard ``k % n_shards``.  The unbounded
+    MEM range uses the fixed cap width.  ``n_shards == 1`` degenerates to
+    "shard 0 owns everything" (the single-device mesh case).
+
+    The block machinery itself — contiguous value blocks, round-robin
+    striping, per-level width caps, vectorized ownership — is the shared
+    :class:`repro.sharding.stripes.BlockStripes` partitioner (the tenant
+    namespace layer stripes the same prime space over tenants with it).
     """
 
     def __init__(self, n_shards: int, stripes_per_shard: int = 8):
-        if n_shards < 1:
-            raise ValueError("n_shards must be >= 1")
-        if stripes_per_shard < 1:
-            raise ValueError("stripes_per_shard must be >= 1")
-        self.n_shards = int(n_shards)
-        self.stripes_per_shard = int(stripes_per_shard)
-        self._blocks: Dict[int, Tuple[int, int]] = {}   # level -> (lo, width)
-        for lvl, (lo, hi) in LEVEL_PRIME_RANGES.items():
-            if hi is None:
-                self._blocks[lvl] = (lo, _BLOCK_CAP[lvl])
-            else:
-                width = max(1, min(
-                    (hi - lo + 1) // (self.n_shards * self.stripes_per_shard),
-                    _BLOCK_CAP[lvl]))
-                self._blocks[lvl] = (lo, width)
+        self.stripes = BlockStripes(n_shards, LEVEL_PRIME_RANGES,
+                                    stripes_per_part=stripes_per_shard)
+        self.n_shards = self.stripes.n_parts
+        self.stripes_per_shard = self.stripes.stripes_per_part
+        self._blocks: Dict[int, Tuple[int, int]] = self.stripes._blocks
 
     def _level_of(self, p: int) -> int:
-        for lvl, (lo, hi) in LEVEL_PRIME_RANGES.items():
-            if p >= lo and (hi is None or p <= hi):
-                return lvl
-        return CacheLevel.MEM
+        return self.stripes.level_of(p)
 
     def owner(self, p: int) -> int:
         """Shard owning prime ``p`` — pure function, O(1), no state."""
-        if self.n_shards == 1:
-            return 0
-        lo, width = self._blocks[self._level_of(int(p))]
-        return ((int(p) - lo) // width) % self.n_shards
+        return self.stripes.owner(p)
 
     def owners(self, primes: Sequence[int]) -> np.ndarray:
-        return np.asarray([self.owner(p) for p in primes], dtype=np.int32)
+        return self.stripes.owners(primes)
 
     def classify(self, registry) -> Tuple[List[List[int]], List[int]]:
         """Split the live registry into per-shard-local and cross-shard

@@ -229,6 +229,14 @@ class PrimePool:
         return p
 
     def free(self, p: int) -> None:
+        """Return ``p`` to the free-list.  Double-frees and *foreign*
+        primes (out of this pool's value range, or never allocated from
+        it — e.g. another tenant namespace's prime) are no-ops: the
+        ``_allocated`` guard is what keeps a double-free from planting
+        the same prime on the free-list twice and handing it to two
+        data elements (pinned in tests/test_pfcs_core.py)."""
+        if not self.contains_range(p):
+            return
         if p in self._allocated:
             self._allocated.remove(p)
             self._free.append(p)
@@ -253,7 +261,13 @@ class HierarchicalPrimeAllocator:
         return self.pools[level].allocate()
 
     def free(self, level: int, p: int) -> None:
-        self.pools[level].free(p)
+        """Free ``p``, routed to the pool whose range actually contains
+        it.  Trusting a wrong ``level`` used to leak the prime silently
+        (the range guard in ``PrimePool.free`` made the mis-routed call
+        a no-op, so the prime was never reusable again) — audited and
+        pinned in tests/test_pfcs_core.py."""
+        owner = self.level_of_prime(p)
+        self.pools[owner if owner in self.pools else level].free(p)
 
     def level_of_prime(self, p: int) -> int:
         for lvl, pool in self.pools.items():

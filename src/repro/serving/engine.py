@@ -75,6 +75,7 @@ class Request:
     req_id: int
     prompt: List[int]
     max_new_tokens: int = 32
+    tenant: int = 0                # namespace id (tenants= mode; else 0)
     generated: List[int] = field(default_factory=list)
     state: str = "queued"          # queued | running | done
     submit_t: float = 0.0
@@ -91,13 +92,38 @@ class ServingEngine:
                  moe: Optional[str] = None, moe_experts: int = 64,
                  moe_slots: int = 16, moe_topk: int = 4,
                  moe_prefetch_budget: int = 4, moe_groups: int = 16,
-                 moe_seed: int = 0):
+                 moe_seed: int = 0, tenants=None):
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
-        if kv == "vec":
-            self.pages: PagedKVCache = VectorizedPagedKVCache(
+        # multi-tenant QoS mode (DESIGN.md §8): tenants= an int (even
+        # HBM split) or a repro.tenancy.TenantQoSConfig; requests carry
+        # a tenant id and the cache enforces per-tenant quotas with
+        # per-tenant PageStats / prefetch logs
+        self.tenants = tenants
+        if tenants is not None:
+            from repro.tenancy.qos import (TenantedPagedKVCache,
+                                           TenantedShardedPagedKVCache,
+                                           TenantedVectorizedPagedKVCache)
+            if kv == "vec":
+                self.pages: PagedKVCache = TenantedVectorizedPagedKVCache(
+                    hbm_pages=hbm_pages, page_size=page_size,
+                    prefetch_budget=prefetch_budget, qos=tenants)
+            elif kv == "scalar":
+                self.pages = TenantedPagedKVCache(
+                    hbm_pages=hbm_pages, page_size=page_size,
+                    prefetch_budget=prefetch_budget, qos=tenants)
+            elif kv == "sharded":
+                self.pages = TenantedShardedPagedKVCache(
+                    hbm_pages=hbm_pages, page_size=page_size,
+                    prefetch_budget=prefetch_budget, n_shards=shards,
+                    mesh=mesh, qos=tenants)
+            else:
+                raise ValueError(f"kv must be 'vec', 'scalar' or 'sharded', "
+                                 f"got {kv!r}")
+        elif kv == "vec":
+            self.pages = VectorizedPagedKVCache(
                 hbm_pages=hbm_pages, page_size=page_size,
                 prefetch_budget=prefetch_budget)
         elif kv == "scalar":
@@ -119,6 +145,19 @@ class ServingEngine:
             moe_experts, moe_topk = model_moe.n_experts, model_moe.top_k
         if moe is None:
             self.experts: Optional[ExpertCache] = None
+        elif tenants is not None and moe in ("vec", "scalar"):
+            from repro.tenancy.qos import (TenantedExpertCache,
+                                           TenantedVectorizedExpertCache)
+            cls = (TenantedVectorizedExpertCache if moe == "vec"
+                   else TenantedExpertCache)
+            # a TenantQoSConfig sizes the KV cache's HBM pages; the
+            # expert tier keeps the tenant count and splits its own
+            # slot budget evenly
+            moe_qos = tenants if isinstance(tenants, int) \
+                else tenants.n_tenants
+            self.experts = cls(moe_experts, hbm_slots=moe_slots,
+                               prefetch_budget=moe_prefetch_budget,
+                               qos=moe_qos)
         elif moe == "vec":
             self.experts = VectorizedExpertCache(
                 moe_experts, hbm_slots=moe_slots,
@@ -175,10 +214,21 @@ class ServingEngine:
 
     # ------------------------------------------------------------------ #
 
-    def submit(self, prompt: Sequence[int], max_new_tokens: int = 32) -> int:
+    def submit(self, prompt: Sequence[int], max_new_tokens: int = 32,
+               tenant: int = 0) -> int:
+        if tenant and self.tenants is None:
+            raise ValueError("tenant ids need tenants= mode (pass "
+                             "tenants=N or a TenantQoSConfig)")
+        if self.tenants is not None:
+            # validate HERE: failing later inside _admit would leave a
+            # permanently-running slot holding an unregistered request
+            n = self.pages.qos_config.n_tenants
+            if not 0 <= int(tenant) < n:
+                raise ValueError(f"tenant {tenant} out of range [0, {n})")
         rid = self._next_id
         self._next_id += 1
         self.queue.append(Request(rid, list(prompt), max_new_tokens,
+                                  tenant=int(tenant),
                                   submit_t=time.monotonic()))
         return rid
 
@@ -190,7 +240,11 @@ class ServingEngine:
             req = self.queue.pop(0)
             req.state = "running"
             self.slots[i] = req
-            self.pages.register_request(req.req_id, req.prompt)
+            if self.tenants is not None:
+                self.pages.register_request(req.req_id, req.prompt,
+                                            tenant=req.tenant)
+            else:
+                self.pages.register_request(req.req_id, req.prompt)
             if self.model is None:
                 continue            # stub mode: no device KV to prefill
             # prefill this slot: feed prompt tokens through decode steps
@@ -299,6 +353,8 @@ class ServingEngine:
                 self.slots[i] = None
         self.steps += 1
         out = {"live": len(live), "page_stats": self.pages.stats}
+        if self.tenants is not None:
+            out["tenant_stats"] = self.pages.qos.tenant_stats
         if self.experts is not None:
             out["expert_stats"] = self.experts.stats
         return out

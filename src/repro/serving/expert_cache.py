@@ -88,15 +88,25 @@ class ExpertCache:
         self.max_group = max_group
         self.factorizer = Factorizer()
         self.registry = CompositeRegistry(self.factorizer)
-        self.assigner = PrimeAssigner(HierarchicalPrimeAllocator(),
-                                      self.registry)
+        self.assigner = self._make_assigner()
         for e in range(n_experts):
-            self.assigner.assign(e, CacheLevel.L2)
+            self._assign_expert(e)
         self.stats = ExpertCacheStats()
         self._seen_groups: Set[frozenset] = set()
         #: every (source expert, prefetched expert) pair ever issued, in
         #: order — the zero-false-positive audit trail (Theorem 1 tests)
         self.prefetch_log: List[Tuple[int, int]] = []
+
+    def _make_assigner(self) -> PrimeAssigner:
+        """Prime-assignment backend (overridden by the multi-tenant
+        cache, which routes each expert to its tenant's namespace —
+        ``repro.tenancy``)."""
+        return PrimeAssigner(HierarchicalPrimeAllocator(), self.registry)
+
+    def _assign_expert(self, e: int) -> None:
+        """Prime assignment for one expert (the multi-tenant cache binds
+        the expert to its tenant's namespace first)."""
+        self.assigner.assign(e, CacheLevel.L2)
 
     # ------------------------------------------------------------------ #
     # co-activation registration                                          #

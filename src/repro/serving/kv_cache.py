@@ -88,12 +88,22 @@ class PagedKVCache:
         self.prefetch_budget = prefetch_budget
         self.factorizer = Factorizer()
         self.registry = CompositeRegistry(self.factorizer)
-        self.assigner = PrimeAssigner(HierarchicalPrimeAllocator(),
-                                      self.registry)
+        self.assigner = self._make_assigner()
         self.chains: Dict[int, List[int]] = {}              # request -> pages
         self._content: Dict[int, int] = {}   # content hash -> page id (prefix share)
         self._next_page = 0
         self.stats = PageStats()
+        #: every (source page, prefetched page) pair ever issued, in
+        #: order — the zero-false-positive audit trail, and part of the
+        #: scalar/vec parity contract (tests/test_serving.py,
+        #: tests/test_tenancy.py)
+        self.prefetch_log: List[Tuple[int, int]] = []
+
+    def _make_assigner(self) -> PrimeAssigner:
+        """Prime-assignment backend (overridden by the multi-tenant
+        cache, which routes each page to its tenant's namespace —
+        ``repro.tenancy``)."""
+        return PrimeAssigner(HierarchicalPrimeAllocator(), self.registry)
 
     # ------------------------------------------------------------------ #
     # page identity & prefix sharing                                      #
@@ -101,15 +111,28 @@ class PagedKVCache:
 
     def _page_for_tokens(self, token_block: Tuple[int, ...]) -> Tuple[int, bool]:
         """Content-addressed page id: identical prefixes share pages."""
-        h = hash(token_block)
+        h = hash(self._content_key(token_block))
         if h in self._content:
             self.stats.shared_prefix_pages += 1
             return self._content[h], True
         pid = self._next_page
         self._next_page += 1
         self._content[h] = pid
-        self.assigner.assign(pid, CacheLevel.L2)
+        self._assign_page(pid)
         return pid, False
+
+    def _content_key(self, token_block: Tuple[int, ...]):
+        """Content-addressing key.  The multi-tenant cache scopes it by
+        tenant: identical token blocks from different tenants must NOT
+        share a page (a shared page would be a cross-tenant
+        relationship — the class of leak the namespace isolation theorem
+        forbids, DESIGN.md §8)."""
+        return token_block
+
+    def _assign_page(self, pid: int) -> None:
+        """Prime assignment for a fresh page (the multi-tenant cache
+        binds the page to its tenant's namespace first)."""
+        self.assigner.assign(pid, CacheLevel.L2)
 
     def register_request(self, req_id: int, tokens: Sequence[int]) -> List[int]:
         """Map a request's prompt onto pages; register chain relationships."""
@@ -216,6 +239,7 @@ class PagedKVCache:
                     continue
                 self._insert_hbm(succ, True)
                 self.stats.prefetches += 1
+                self.prefetch_log.append((pid, succ))
                 budget -= 1
                 if budget <= 0:
                     return

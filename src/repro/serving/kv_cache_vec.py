@@ -99,8 +99,15 @@ class VectorizedPagedKVCache(PagedKVCache):
         self._succ_len = np.zeros((64,), dtype=np.int32)
         self._table_version = self.registry.version
         self.bulk_refreshes = 0
-        # chain registry as composite arrays: request -> int64 chunk array
-        self._chain_chunks: Dict[int, np.ndarray] = {}
+        # chain registry as composite arrays: request -> (int64 chunk
+        # array, assigner epoch at build).  The epoch guards against
+        # recycled primes: Algorithm-1 recycling can free a chain
+        # page's prime and hand it to a NEW page, and a chunk array
+        # built before the recycle would then gcd-match the new page's
+        # chain — false sharing the scalar oracle (which reads primes
+        # live) never reports.  A stale epoch forces a rebuild from the
+        # live chain (regression-tested in tests/test_tenancy.py).
+        self._chain_chunks: Dict[int, Tuple[np.ndarray, int]] = {}
 
     # ------------------------------------------------------------------ #
     # array growth                                                        #
@@ -158,11 +165,29 @@ class VectorizedPagedKVCache(PagedKVCache):
     def register_request(self, req_id: int, tokens: Sequence[int]
                          ) -> List[int]:
         pages = super().register_request(req_id, tokens)
-        primes = [p for pid in pages
-                  if (p := self.assigner.prime_of(pid)) is not None]
-        self._chain_chunks[req_id] = np.asarray(
-            encode_relationship(primes) if primes else [], dtype=np.int64)
+        self._build_chunks(req_id)
         return pages
+
+    def _assigner_epoch(self) -> int:
+        return getattr(self.assigner, "epoch", 0)
+
+    def _build_chunks(self, req_id: int) -> np.ndarray:
+        primes = [p for pid in self.chains.get(req_id, ())
+                  if (p := self.assigner.prime_of(pid)) is not None]
+        chunks = np.asarray(encode_relationship(primes) if primes else [],
+                            dtype=np.int64)
+        self._chain_chunks[req_id] = (chunks, self._assigner_epoch())
+        return chunks
+
+    def _chunks_of(self, req_id: int) -> np.ndarray:
+        """Live chunk array for a request — rebuilt when any prime
+        release happened since it was cached (see ``_chain_chunks``)."""
+        if req_id not in self.chains:
+            return np.empty(0, dtype=np.int64)
+        cached = self._chain_chunks.get(req_id)
+        if cached is not None and cached[1] == self._assigner_epoch():
+            return cached[0]
+        return self._build_chunks(req_id)
 
     def release_request(self, req_id: int) -> None:
         super().release_request(req_id)
@@ -269,6 +294,7 @@ class VectorizedPagedKVCache(PagedKVCache):
                 continue
             self._insert(succ, True)
             self.stats.prefetches += 1
+            self.prefetch_log.append((pid, succ))
             budget -= 1
             if budget <= 0:
                 return
@@ -316,8 +342,7 @@ class VectorizedPagedKVCache(PagedKVCache):
 
         blocks: List[Tuple[Tuple[int, int], np.ndarray, np.ndarray]] = []
         for ra, rb in pairs:
-            ca = self._chain_chunks.get(ra, np.empty(0, dtype=np.int64))
-            cb = self._chain_chunks.get(rb, np.empty(0, dtype=np.int64))
+            ca, cb = self._chunks_of(ra), self._chunks_of(rb)
             blocks.append(((ra, rb), np.repeat(ca, cb.size),
                            np.tile(cb, ca.size)))
         flat_a = np.concatenate([a for _, a, _ in blocks]) if blocks \

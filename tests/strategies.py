@@ -46,6 +46,8 @@ __all__ = [
     "adversarial_trace", "adversarial_stream_specs",
     "ExpertWorkloadSpec", "build_expert_sets", "drive_expert",
     "expert_workload_specs",
+    "TenantMixSpec", "build_tenant_requests", "drive_tenants",
+    "tenant_mix_specs",
     "HAVE_HYPOTHESIS", "given", "settings", "st",
 ]
 
@@ -189,6 +191,145 @@ def kv_workload_specs():
         release=st.booleans(),
         drop_primes=st.booleans(),
         sweeps=st.sampled_from([0, 2]),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# multi-tenant workloads (tenancy tier)                                       #
+# --------------------------------------------------------------------------- #
+
+@dataclass(frozen=True)
+class TenantMixSpec:
+    """Compact description of a mixed-tenant serving workload; expanded
+    by :func:`build_tenant_requests` into a tenant-tagged abstract op
+    sequence (the tenancy differential fuzz's input —
+    tests/test_tenancy.py)."""
+
+    seed: int = 0
+    n_tenants: int = 2
+    n_requests: int = 10
+    n_touches: int = 120
+    key_space: int = 300
+    shared_pool: int = 24          # per-tenant shared-prefix token pool
+    max_tail: int = 20             # per-request tail length bound
+    hot_tenant: bool = False       # tenant 0 draws extra zipf-hot touches
+    scanner_tenant: bool = False   # last tenant sweeps whole chains
+    cross_prefix: bool = False     # tenants submit IDENTICAL token
+    #                                prefixes (isolation must still keep
+    #                                their pages distinct)
+    release: bool = True           # retire old requests mid-stream
+    drop_primes: bool = False      # out-of-band Algorithm-1 prime drops
+
+
+def build_tenant_requests(spec: TenantMixSpec) -> List[Tuple]:
+    """Expand a spec into a tenant-tagged abstract op list.
+
+    Ops mirror :func:`build_kv_ops` (selectors resolved modulo live
+    state at apply time) with tenant-aware registration:
+
+      ("register", rid, tenant, tokens) — submit a request for a tenant
+      ("touch", a, b)                   — touch live request a-th, page b-th
+      ("sweep", a)                      — full-chain sequential re-read
+                                          (the scanner/adversarial pattern)
+      ("release", )                     — retire the oldest live request
+      ("drop", d)                       — assigner.release a page's prime
+    """
+    rng = np.random.default_rng(spec.seed)
+    T = max(1, spec.n_tenants)
+    pools = [list(rng.integers(0, spec.key_space, size=spec.shared_pool))
+             for _ in range(T)]
+    if spec.cross_prefix:
+        pools = [list(pools[0]) for _ in range(T)]   # identical tokens
+    ops: List[Tuple] = []
+    per_req = max(1, spec.n_touches // max(1, spec.n_requests))
+    scanner = T - 1
+    for r in range(spec.n_requests):
+        t = int(rng.integers(T))
+        pfx = int(rng.integers(0, spec.shared_pool))
+        tail_n = int(rng.integers(4, spec.max_tail))
+        if spec.scanner_tenant and t == scanner:
+            tail_n = spec.max_tail + 8               # long chains to sweep
+        tail = list(rng.integers(0, spec.key_space, size=tail_n))
+        ops.append(("register", r, t, tuple(pools[t][:pfx] + tail)))
+        if spec.drop_primes and rng.integers(4) == 0:
+            ops.append(("drop", int(rng.integers(1 << 30))))
+        n_t = per_req * (3 if spec.hot_tenant and t == 0 else 1)
+        for _ in range(n_t):
+            ops.append(("touch", int(rng.integers(1 << 30)),
+                        int(rng.integers(1 << 30))))
+        if spec.scanner_tenant and t == scanner:
+            ops.append(("sweep", r))
+        if spec.release and r > 4 and rng.integers(3) == 0:
+            ops.append(("release",))
+    return ops
+
+
+def drive_tenants(kv, ops: Sequence[Tuple], step_hook=None) -> List[str]:
+    """Replay a tenant-tagged op list against one tenanted cache;
+    returns every touch's tier string (the differential-comparison
+    payload).  ``step_hook(kv)``, when given, runs after EVERY op — the
+    tenancy fuzz passes the namespace isolation checker here so the
+    invariant is proven at every intermediate state, not just at the
+    end."""
+    from repro.core.primes import CacheLevel
+
+    tiers: List[str] = []
+    live: List[int] = []
+    for op in ops:
+        kind = op[0]
+        if kind == "register":
+            _, rid, tenant, tokens = op
+            kv.register_request(rid, list(tokens), tenant=tenant)
+            live.append(rid)
+        elif kind == "touch":
+            _, a, b = op
+            if live:
+                rid = live[a % len(live)]
+                chain = kv.chains.get(rid) or ()
+                if chain:
+                    tiers.append(kv.touch(rid, b % len(chain)))
+        elif kind == "sweep":
+            (_, a) = op
+            if live:
+                rid = live[a % len(live)]
+                chain = kv.chains.get(rid) or ()
+                if chain:
+                    tiers.extend(kv.touch_batch(
+                        [(rid, j) for j in range(len(chain))]))
+        elif kind == "release":
+            if live:
+                kv.release_request(live.pop(0))
+        elif kind == "drop":
+            (_, d) = op
+            if kv._next_page:
+                kv.assigner.release(d % kv._next_page, CacheLevel.L2)
+        else:                       # pragma: no cover - builder invariant
+            raise ValueError(f"unknown op {kind!r}")
+        if step_hook is not None:
+            step_hook(kv)
+    return tiers
+
+
+def tenant_mix_specs():
+    """Strategy over mixed-tenant workload specs, biased toward the
+    edges the tenancy parity suite cares about: hot/scanner tenant
+    mixes, identical cross-tenant prefixes (content-isolation path),
+    releases, and out-of-band prime drops (degenerate quotas come from
+    the caller's cache config)."""
+    return st.builds(
+        TenantMixSpec,
+        seed=st.integers(min_value=0, max_value=2**16),
+        n_tenants=st.sampled_from([1, 2, 4]),
+        n_requests=st.integers(min_value=3, max_value=12),
+        n_touches=st.integers(min_value=10, max_value=140),
+        key_space=st.sampled_from([60, 300]),
+        shared_pool=st.sampled_from([8, 24]),
+        max_tail=st.sampled_from([6, 20]),
+        hot_tenant=st.booleans(),
+        scanner_tenant=st.booleans(),
+        cross_prefix=st.booleans(),
+        release=st.booleans(),
+        drop_primes=st.booleans(),
     )
 
 

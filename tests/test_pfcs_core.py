@@ -176,3 +176,60 @@ def test_assigner_recycling_under_exhaustion():
         p = assigner.assign(i, CacheLevel.L1)
         assert p is not None
     assert assigner.stats.recycle_events >= 1
+
+
+# --------------------------------------------------------------------------- #
+# prime-pool free / release audit (double-free + foreign-prime paths)         #
+# --------------------------------------------------------------------------- #
+
+def test_pool_double_free_is_noop():
+    """A double-freed prime must NOT land on the free-list twice (two
+    data elements sharing one prime would break unique decoding)."""
+    alloc = HierarchicalPrimeAllocator()
+    pool = alloc.pool(CacheLevel.L1)
+    ps = [pool.allocate() for _ in range(4)]
+    pool.free(ps[1])
+    pool.free(ps[1])                    # double free: no-op
+    assert pool.allocate() == ps[1]     # handed out once...
+    nxt = pool.allocate()
+    assert nxt != ps[1]                 # ...and only once
+    assert pool.n_allocated == 5
+
+
+def test_pool_foreign_and_unallocated_free_are_noops():
+    alloc = HierarchicalPrimeAllocator()
+    pool = alloc.pool(CacheLevel.L2)
+    p = pool.allocate()
+    before = (pool.n_allocated, len(pool._free))
+    pool.free(5)           # foreign: out of the L2 value range entirely
+    pool.free(1013)        # in range but never allocated here
+    assert (pool.n_allocated, len(pool._free)) == before
+    pool.free(p)
+    assert pool.allocate() == p
+
+
+def test_allocator_free_routes_to_owning_pool():
+    """Freeing with a wrong level id used to leak the prime (the range
+    guard made the mis-routed free a silent no-op, so the prime was
+    never reusable); the allocator now routes by value ownership."""
+    alloc = HierarchicalPrimeAllocator()
+    p = alloc.allocate(CacheLevel.L2)
+    alloc.free(CacheLevel.L1, p)        # wrong level on purpose
+    assert alloc.allocate(CacheLevel.L2) == p   # reusable again
+    # stats stay sane in the owning pool
+    assert alloc.pool(CacheLevel.L1).n_allocated == 0
+
+
+def test_assigner_release_idempotent_and_epoch():
+    assigner = PrimeAssigner()
+    p = assigner.assign("x", CacheLevel.L2)
+    assert assigner.epoch == 0
+    assigner.release("x", CacheLevel.L2)
+    assert assigner.epoch == 1
+    assert assigner.prime_of("x") is None
+    assigner.release("x", CacheLevel.L2)        # double release: no-op
+    assigner.release("never-seen", CacheLevel.L2)
+    assert assigner.epoch == 1
+    # the freed prime is reusable exactly once
+    assert assigner.assign("y", CacheLevel.L2) == p
+    assert assigner.assign("z", CacheLevel.L2) != p

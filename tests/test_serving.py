@@ -152,6 +152,62 @@ def test_out_of_band_registry_drop_forces_rebuild():
     assert list(a.hbm.items()) == list(b.hbm.items())
 
 
+def test_prime_pool_exhaustion_recycling_parity():
+    """Drive BOTH caches into Algorithm-1 prime recycling (the
+    ``recycle_fraction`` path) under long-horizon churn: tiny custom
+    pools exhaust, hot upcoming pages take the recycle branch, recycled
+    primes get reassigned — and the vectorized cache must stay bit-exact
+    on PARITY_COUNTERS, per-touch tiers, LRU order, the prefetch log,
+    AND gcd shared-prefix answers (the stale-chunk class of divergence
+    regression-tested in tests/test_tenancy.py)."""
+    from repro.core.assignment import PrimeAssigner
+    from repro.core.primes import CacheLevel, HierarchicalPrimeAllocator
+
+    ranges = {CacheLevel.L1: (2, 13), CacheLevel.L2: (17, 97),
+              CacheLevel.L3: (101, 199), CacheLevel.MEM: (211, None)}
+
+    def run(cls):
+        kv = cls(hbm_pages=8, page_size=4, prefetch_budget=2)
+        # shrink the prime space so churn actually exhausts it (no page
+        # registered yet: identity state swaps cleanly)
+        kv.assigner = PrimeAssigner(HierarchicalPrimeAllocator(ranges),
+                                    kv.registry)
+        tiers = []
+        for r in range(40):
+            # mark the upcoming pages hot (recycle needs freq > 0.3,
+            # i.e. two EWMA records) — identical calls on both caches
+            for k in range(6):
+                kv.assigner.tracker.record(kv._next_page + k)
+                kv.assigner.tracker.record(kv._next_page + k)
+            kv.register_request(r, [r * 40 + k for k in range(16)])
+            tiers.extend(kv.touch_batch(
+                [(r, j) for j in range(len(kv.chains[r]))]))
+            if r >= 8 and r % 3 == 0:
+                kv.release_request(r - 8)
+        return kv, tiers
+
+    a, ta = run(PagedKVCache)
+    b, tb = run(VectorizedPagedKVCache)
+    # churn genuinely took the recycle path, identically
+    assert a.assigner.stats.recycle_events > 0
+    assert (a.assigner.stats.recycle_events
+            == b.assigner.stats.recycle_events)
+    assert (a.assigner.stats.recycled_primes
+            == b.assigner.stats.recycled_primes)
+    assert ta == tb
+    for f in PARITY_COUNTERS:
+        assert getattr(a.stats, f) == getattr(b.stats, f), f
+    assert list(a.hbm.items()) == list(b.hbm.items())
+    assert a.host == b.host
+    assert a.prefetch_log == b.prefetch_log
+    # gcd shared-prefix answers agree even with recycled+reused primes
+    live = [r for r in a.chains if r in b.chains][-6:]
+    for i in live:
+        for j in live:
+            if i < j:
+                assert a.shared_prefix(i, j) == b.shared_prefix(i, j), (i, j)
+
+
 def test_vec_rejects_bad_config():
     with pytest.raises(ValueError):
         VectorizedPagedKVCache(hbm_pages=0)

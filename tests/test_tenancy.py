@@ -1,0 +1,584 @@
+"""Multi-tenant QoS serving: namespace laws, quota parity, isolation.
+
+Discipline (extends tests/test_serving.py / test_serving_sharded.py):
+``TenantedPagedKVCache`` is the bit-exact oracle;
+``TenantedVectorizedPagedKVCache`` AND ``TenantedShardedPagedKVCache``
+(1 and 2 shards) must reproduce every ``PARITY_COUNTERS`` entry, every
+per-touch tier, the exact HBM LRU order, the prefetch log, and every
+per-tenant stat under ANY interleaving of tenant-tagged registration,
+touches, sweeps, releases, and out-of-band prime drops — at 1, 2, and
+4 tenants.  On top of parity, the namespace isolation invariant
+(every live composite factors inside ONE tenant's blocks; cross-tenant
+composites are coprime) is proven after EVERY fuzzed step, and the
+prefetch log is audited for zero cross-tenant traffic.
+"""
+
+import numpy as np
+import pytest
+
+from strategies import (TenantMixSpec, build_tenant_requests, drive_tenants,
+                        given, settings, st, tenant_mix_specs)
+from repro.core.primes import CacheLevel, LEVEL_PRIME_RANGES
+from repro.serving.engine import ServingEngine
+from repro.serving.kv_cache import PARITY_COUNTERS, PagedKVCache
+from repro.serving.kv_cache_vec import VectorizedPagedKVCache
+from repro.tenancy import (TenantNamespace, TenantQoSConfig,
+                           TenantedExpertCache, TenantedPagedKVCache,
+                           TenantedShardedPagedKVCache,
+                           TenantedVectorizedExpertCache,
+                           TenantedVectorizedPagedKVCache, weighted_quotas)
+
+
+# --------------------------------------------------------------------------- #
+# namespace laws                                                              #
+# --------------------------------------------------------------------------- #
+
+def test_namespace_membership_total_vectorized_and_disjoint():
+    ns = TenantNamespace(3)
+    rng = np.random.default_rng(0)
+    vals = np.concatenate([
+        rng.integers(2, 1000, size=50),            # L1 range
+        rng.integers(1009, 100_000, size=50),      # L2
+        rng.integers(100_003, 1_000_000, size=50), # L3
+        rng.integers(1_000_003, 3_000_000, size=50),  # MEM
+        np.asarray([998, 1000, 1])])               # gap / degenerate values
+    vec = ns.tenant_of_values(vals)
+    assert vec.dtype == np.int32
+    # vectorized membership == the scalar pure function, and total
+    assert vec.tolist() == [ns.tenant_of_value(int(v)) for v in vals]
+    assert ((vec >= 0) & (vec < 3)).all()
+    # pure/stable
+    assert ns.tenant_of_values(vals).tolist() == vec.tolist()
+    # is_member mask agrees
+    assert (ns.is_member(1, vals) == (vec == 1)).all()
+    # 1-tenant degenerate: tenant 0 owns everything
+    assert (TenantNamespace(1).tenant_of_values(vals) == 0).all()
+    with pytest.raises(ValueError):
+        TenantNamespace(0)
+
+
+def test_namespace_allocators_disjoint_and_in_own_blocks():
+    ns = TenantNamespace(4)
+    allocs = [ns.make_allocator(t) for t in range(4)]
+    got = {}
+    for t, al in enumerate(allocs):
+        for lvl in (CacheLevel.L1, CacheLevel.L2):
+            got[(t, lvl)] = [al.allocate(lvl) for _ in range(12)]
+            # every allocated prime falls in the tenant's own blocks
+            assert (ns.tenant_of_values(got[(t, lvl)]) == t).all()
+    # pairwise disjoint across tenants (same level ranges!)
+    all_primes = [p for ps in got.values() for p in ps]
+    assert len(set(all_primes)) == len(all_primes)
+    with pytest.raises(ValueError):
+        ns.make_allocator(4)
+
+
+def test_one_tenant_allocator_matches_global_pool():
+    """The 1-tenant namespace degenerates to the untenanted prime space:
+    allocation order is value-for-value the global allocator's."""
+    from repro.core.primes import HierarchicalPrimeAllocator
+
+    ns = TenantNamespace(1)
+    a, b = ns.make_allocator(0), HierarchicalPrimeAllocator()
+    for lvl in CacheLevel.ALL:
+        assert [a.allocate(lvl) for _ in range(32)] == \
+               [b.allocate(lvl) for _ in range(32)]
+
+
+def test_isolation_checker_proves_and_detects():
+    from repro.core.composite import CompositeRegistry
+
+    ns = TenantNamespace(2)
+    reg = CompositeRegistry()
+    a0, a1 = ns.make_allocator(0), ns.make_allocator(1)
+    p0 = [a0.allocate(CacheLevel.L2) for _ in range(6)]
+    p1 = [a1.allocate(CacheLevel.L2) for _ in range(6)]
+    for i in range(0, 6, 2):
+        reg.register({p0[i], p0[i + 1]})
+        reg.register({p1[i], p1[i + 1]})
+    rep = ns.check_isolation(reg, pairwise_gcd=True)
+    assert rep.ok and not rep.violations
+    assert rep.n_composites == 6 and rep.per_tenant == [3, 3]
+    # the theorem, literally: every cross-tenant composite pair coprime
+    assert rep.coprime_pairs_checked == 9
+    ns.assert_isolated(reg)
+    # inject a cross-tenant relationship -> checker must flag it
+    reg.register({p0[0], p1[0]})
+    bad = ns.check_isolation(reg)
+    assert not bad.ok
+    assert bad.violations and bad.violations[0][1] == (0, 1)
+    with pytest.raises(AssertionError):
+        ns.assert_isolated(reg)
+
+
+def test_weighted_quotas_apportionment():
+    assert weighted_quotas(10, [3, 1, 1]) == [5, 3, 2]
+    assert weighted_quotas(4, [100, 1, 1, 1]) == [1, 1, 1, 1]
+    assert sum(weighted_quotas(17, [5, 2, 1])) == 17
+    assert min(weighted_quotas(7, [1000, 1, 1])) >= 1
+    with pytest.raises(ValueError):
+        weighted_quotas(2, [1, 1, 1])       # capacity < n_tenants
+    with pytest.raises(ValueError):
+        weighted_quotas(4, [1, 0])          # zero priority
+    cfg = TenantQoSConfig.weighted(12, [2, 1, 1], prefetch_budget=3)
+    assert sum(cfg.hbm_quota) == 12 and cfg.prefetch_budget == (3, 3, 3)
+    with pytest.raises(ValueError):
+        TenantQoSConfig(2, (8, 8), (1, 1), (1, 1)).validate(12)  # over cap
+    with pytest.raises(ValueError):
+        TenantQoSConfig(2, (8,), (1, 1), (1, 1)).validate(12)    # len
+    with pytest.raises(ValueError):
+        TenantedVectorizedPagedKVCache(hbm_pages=4, qos=8)       # cap < T
+
+
+def test_namespace_and_assigner_introspection():
+    from repro.core.composite import CompositeRegistry
+    from repro.tenancy.namespace import TenantAssigner
+
+    ns = TenantNamespace(2)
+    assert "TenantNamespace" in ns.describe()
+    assert ns.stripes.block_of(CacheLevel.L2)[1] >= 1
+    ta = TenantAssigner(ns, CompositeRegistry())
+    with pytest.raises(KeyError):
+        ta.assign("unbound", CacheLevel.L2)     # must bind() first
+    ta.release("unbound", CacheLevel.L2)        # unbound release: no-op
+    assert ta.tenant_of("unbound") is None
+    assert ta.data_of(1009) is None             # prime no one allocated
+    assert ta.epoch == 0
+    kv = TenantedVectorizedPagedKVCache(hbm_pages=8, page_size=4, qos=2)
+    kv.register_request(0, list(range(8)), tenant=1)
+    kv.touch(0, 0)
+    assert len(kv.tenant_hit_rates()) == 2
+
+
+def test_expert_custom_tenant_mapping_and_errors():
+    mapping = [0, 1, 0, 1, 0, 1]                # interleaved ownership
+    ec = TenantedExpertCache(6, hbm_slots=4, prefetch_budget=2, qos=2,
+                             tenant_of_expert=mapping)
+    assert ec.tenant_of_expert.tolist() == mapping
+    ec.observe_routing([(0, 2, 4), (1, 3)])
+    ec.activate_batch([(0, 2), (1, 3)])
+    ec.namespace.assert_isolated(ec.registry)
+    assert ec.cross_tenant_prefetches() == 0
+    with pytest.raises(ValueError):
+        TenantedExpertCache(6, hbm_slots=4, qos=2,
+                            tenant_of_expert=[0, 1])        # wrong shape
+    with pytest.raises(ValueError):
+        TenantedExpertCache(6, hbm_slots=4, qos=2,
+                            tenant_of_expert=[0, 1, 2, 0, 1, 5])  # range
+    with pytest.raises(ValueError):
+        TenantedVectorizedPagedKVCache(
+            hbm_pages=8, qos=2, namespace=TenantNamespace(3))  # mismatch
+
+
+# --------------------------------------------------------------------------- #
+# differential fuzz: scalar oracle == vec == sharded, per-tenant              #
+# --------------------------------------------------------------------------- #
+
+def _assert_tenant_parity(oracle, kv, name):
+    for f in PARITY_COUNTERS:
+        assert getattr(kv.stats, f) == getattr(oracle.stats, f), (name, f)
+    assert list(kv.hbm.items()) == list(oracle.hbm.items()), name
+    assert kv.host == oracle.host, name
+    assert kv.prefetch_log == oracle.prefetch_log, name
+    T = oracle.qos_config.n_tenants
+    for t in range(T):
+        for f in PARITY_COUNTERS:
+            assert getattr(kv.qos.tenant_stats[t], f) \
+                == getattr(oracle.qos.tenant_stats[t], f), (name, t, f)
+        assert kv.qos.tenant_logs[t] == oracle.qos.tenant_logs[t], (name, t)
+        assert kv.qos.occupancy[t] == oracle.qos.occupancy[t], (name, t)
+        assert kv.qos.occupancy[t] <= kv.qos.quota[t], (name, t)
+    assert kv.cross_tenant_prefetches() == 0, name
+
+
+def _differential(spec: TenantMixSpec, hbm: int, budget: int,
+                  shards=()) -> None:
+    ops = build_tenant_requests(spec)
+    T = spec.n_tenants
+    caches = {
+        "scalar": TenantedPagedKVCache(hbm_pages=hbm, page_size=4,
+                                       prefetch_budget=budget, qos=T),
+        "vec": TenantedVectorizedPagedKVCache(hbm_pages=hbm, page_size=4,
+                                              prefetch_budget=budget, qos=T),
+    }
+    for n in shards:
+        caches[f"shard{n}"] = TenantedShardedPagedKVCache(
+            hbm_pages=hbm, page_size=4, prefetch_budget=budget,
+            n_shards=n, qos=T)
+
+    def isolated(kv):
+        kv.namespace.assert_isolated(kv.registry)
+
+    tiers = {name: drive_tenants(kv, ops,
+                                 step_hook=isolated if name == "vec"
+                                 else None)
+             for name, kv in caches.items()}
+    oracle = caches["scalar"]
+    assert oracle.cross_tenant_prefetches() == 0
+    for name, kv in caches.items():
+        if name == "scalar":
+            continue
+        assert tiers[name] == tiers["scalar"], name
+        _assert_tenant_parity(oracle, kv, name)
+    for n in shards:
+        kv = caches[f"shard{n}"]
+        assert (kv.aggregate_shard_stats().parity_tuple()
+                == kv.stats.parity_tuple())
+
+
+@given(spec=tenant_mix_specs(),
+       hbm=st.sampled_from([4, 8, 24]),
+       budget=st.integers(min_value=0, max_value=4))
+@settings(max_examples=10, deadline=None)
+def test_differential_fuzz_property(spec, hbm, budget):
+    """Any drawn tenant mix: oracle and vec agree bit-for-bit — tiers,
+    global and per-tenant counters, LRU order, prefetch logs — and the
+    isolation theorem holds after every single step."""
+    _differential(spec, hbm, budget)
+
+
+# deterministic pinned cases: the edge paths stay covered when
+# hypothesis is not installed (tier-1 must not lose this coverage)
+_PINNED = [
+    # 1-tenant degenerate, quota == whole HBM
+    (TenantMixSpec(seed=3, n_tenants=1, n_requests=8, n_touches=90), 8, 3),
+    # 1-page-per-tenant quota: every insert evicts the tenant's own page
+    (TenantMixSpec(seed=5, n_tenants=4, n_requests=10, n_touches=100), 4, 2),
+    # quota exhaustion under a hot tenant + releases
+    (TenantMixSpec(seed=7, n_tenants=2, n_requests=12, n_touches=120,
+                   hot_tenant=True), 6, 2),
+    # adversarial scanner tenant sweeping long chains
+    (TenantMixSpec(seed=9, n_tenants=3, n_requests=10, n_touches=80,
+                   scanner_tenant=True), 9, 2),
+    # identical cross-tenant prefixes (content-isolation path) + drops
+    (TenantMixSpec(seed=11, n_tenants=2, n_requests=9, n_touches=90,
+                   cross_prefix=True, drop_primes=True), 8, 3),
+]
+_PIN_IDS = ["degenerate-1", "quota-1page", "hot-exhaustion", "scanner",
+            "cross-prefix-drops"]
+
+
+@pytest.mark.parametrize("spec,hbm,budget", _PINNED, ids=_PIN_IDS)
+def test_differential_fuzz_pinned(spec, hbm, budget):
+    _differential(spec, hbm, budget)
+
+
+@pytest.mark.parametrize("spec,hbm,budget", [_PINNED[2], _PINNED[3]],
+                         ids=["hot-exhaustion", "scanner"])
+def test_tenancy_composes_with_sharded(spec, hbm, budget):
+    """Tenant namespaces x mesh-sharded cache (1 and 2 shards): the two
+    stripings of the same prime space compose without breaking parity,
+    per-tenant accounting, or per-shard aggregation (runs under
+    shard_map on the forced-2-device CI mesh)."""
+    _differential(spec, hbm, budget, shards=(1, 2))
+
+
+# --------------------------------------------------------------------------- #
+# degenerate and quota semantics                                              #
+# --------------------------------------------------------------------------- #
+
+def test_one_tenant_equals_untenanted_cache():
+    """tenants=1 with quota == whole HBM is the untenanted cache, bit
+    for bit: same pages, tiers, counters, LRU order, prefetch log."""
+    spec = TenantMixSpec(seed=13, n_tenants=1, n_requests=10, n_touches=120)
+    ops = build_tenant_requests(spec)
+    a = VectorizedPagedKVCache(hbm_pages=8, page_size=4, prefetch_budget=3)
+    b = TenantedVectorizedPagedKVCache(hbm_pages=8, page_size=4,
+                                       prefetch_budget=3, qos=1)
+    ta = drive_tenants(_Untenanted(a), ops)
+    tb = drive_tenants(b, ops)
+    assert ta == tb
+    assert a.stats.parity_tuple() == b.stats.parity_tuple()
+    assert list(a.hbm.items()) == list(b.hbm.items())
+    assert a.host == b.host
+    assert a.prefetch_log == b.prefetch_log
+    # the whole workload charged to tenant 0
+    assert b.qos.tenant_stats[0].parity_tuple() == b.stats.parity_tuple()
+
+
+class _Untenanted:
+    """Adapter: drives an untenanted cache with tenant-tagged ops (the
+    tenant tag is dropped — only valid for 1-tenant specs)."""
+
+    def __init__(self, kv):
+        self._kv = kv
+
+    def register_request(self, rid, tokens, tenant=0):
+        assert tenant == 0
+        return self._kv.register_request(rid, tokens)
+
+    def __getattr__(self, name):
+        return getattr(self._kv, name)
+
+
+def test_quota_exhaustion_confines_evictions():
+    """A tenant churning far past its quota evicts ONLY its own pages:
+    the victim is never another tenant's, occupancy never exceeds
+    quota, and a bystander's resident pages stay resident."""
+    cfg = TenantQoSConfig(2, (2, 6), (2, 2), (1, 3))
+    kv = TenantedVectorizedPagedKVCache(hbm_pages=8, page_size=4,
+                                        prefetch_budget=2, qos=cfg)
+    kv.register_request(100, list(range(12)), tenant=1)     # 3 pages
+    for j in range(3):
+        kv.touch(100, j)
+    resident_b = [pid for pid in kv.chains[100] if pid in kv.hbm]
+    assert len(resident_b) == 3
+    # hammer tenant 0 with 25 distinct single-page requests (quota 2)
+    for r in range(25):
+        kv.register_request(r, [1000 + 4 * r + k for k in range(4)],
+                            tenant=0)
+        kv.touch(r, 0)
+        assert kv.qos.occupancy[0] <= 2
+        assert all(pid in kv.hbm for pid in resident_b)     # untouched
+    assert kv.stats.evictions >= 23
+    # every eviction was charged to (and suffered by) tenant 0
+    assert kv.qos.tenant_stats[0].evictions == kv.stats.evictions
+    assert kv.qos.tenant_stats[1].evictions == 0
+
+
+def test_scanner_tenant_cannot_thrash_hot_tenant():
+    """The QoS claim end-to-end: an adversarial scanner sweeping long
+    chains destroys a hot tenant's hit rate in a shared (untenanted)
+    cache, but cannot touch it under per-tenant quotas."""
+    def run(tenanted: bool) -> float:
+        if tenanted:
+            kv = TenantedVectorizedPagedKVCache(
+                hbm_pages=8, page_size=4, prefetch_budget=0,
+                qos=TenantQoSConfig(2, (4, 4), (0, 0), (1, 1)))
+            kv.register_request(0, list(range(16)), tenant=0)   # 4 pages
+            kv.register_request(1, list(range(100, 196)), tenant=1)
+        else:
+            kv = VectorizedPagedKVCache(hbm_pages=8, page_size=4,
+                                        prefetch_budget=0)
+            kv.register_request(0, list(range(16)))
+            kv.register_request(1, list(range(100, 196)))       # 24 pages
+        hot_hits = hot_total = 0
+        for i in range(30):
+            tier = kv.touch(0, i % 4)                # hot working set
+            hot_hits += tier == "hbm"
+            hot_total += 1
+            kv.touch_batch([(1, j) for j in range(len(kv.chains[1]))])
+        return hot_hits / hot_total
+
+    protected, shared = run(tenanted=True), run(tenanted=False)
+    assert shared < 0.2          # LRU sweep thrash: hot set evicted
+    assert protected > 0.85      # quota confinement: hot set survives
+
+
+def test_per_tenant_prefetch_budget_enforced():
+    """Tenant budgets replace the global one: a 0-budget tenant never
+    prefetches while its neighbour does, and tenant logs say whose
+    prefetch was whose."""
+    cfg = TenantQoSConfig(2, (6, 6), (0, 3), (1, 1))
+    for cls in (TenantedPagedKVCache, TenantedVectorizedPagedKVCache):
+        kv = cls(hbm_pages=12, page_size=4, prefetch_budget=4, qos=cfg)
+        kv.register_request(0, list(range(32)), tenant=0)       # 8 pages
+        kv.register_request(1, list(range(100, 132)), tenant=1)
+        kv.touch(0, 0)
+        kv.touch(1, 0)
+        assert not kv.qos.tenant_logs[0]
+        assert kv.qos.tenant_logs[1]
+        assert kv.qos.tenant_stats[0].prefetches == 0
+        assert kv.qos.tenant_stats[1].prefetches == len(
+            kv.qos.tenant_logs[1])
+        assert kv.cross_tenant_prefetches() == 0
+
+
+def test_tenant_binding_and_bad_inputs():
+    kv = TenantedVectorizedPagedKVCache(hbm_pages=8, page_size=4, qos=2)
+    with pytest.raises(ValueError):
+        kv.register_request(0, [1, 2, 3], tenant=2)
+    pages = kv.register_request(0, [1, 2, 3, 4, 5], tenant=1)
+    assert all(kv.tenant_of_page(p) == 1 for p in pages)
+    assert kv.tenant_of_request(0) == 1
+    # same tokens, other tenant: pages must NOT be shared
+    pages2 = kv.register_request(1, [1, 2, 3, 4, 5], tenant=0)
+    assert not (set(pages) & set(pages2))
+    assert kv.stats.shared_prefix_pages == 0
+    # ... but the SAME tenant does share them
+    pages3 = kv.register_request(2, [1, 2, 3, 4, 5], tenant=1)
+    assert pages3 == pages
+    assert kv.stats.shared_prefix_pages > 0
+
+
+# --------------------------------------------------------------------------- #
+# recycled primes (per-namespace recycling + the stale-chunk regression)      #
+# --------------------------------------------------------------------------- #
+
+def test_shared_prefix_after_prime_recycle_matches_oracle():
+    """Regression: the vectorized cache cached chain-composite chunks
+    forever, so a prime freed by Algorithm-1 recycling and reassigned
+    to a NEW page still gcd-matched the old chain — false sharing the
+    scalar oracle (reading primes live) never reports.  The chunk
+    arrays now rebuild when the assigner epoch moves."""
+    a = PagedKVCache(hbm_pages=8, page_size=4)
+    b = VectorizedPagedKVCache(hbm_pages=8, page_size=4)
+    for kv in (a, b):
+        kv.register_request(0, [1, 2, 3, 4])          # page 0, prime p
+        kv.assigner.release(0, CacheLevel.L2)         # free p
+        kv.register_request(1, [9, 9, 9, 9])          # page 1 reuses p
+    assert a.assigner.prime_of(1) == b.assigner.prime_of(1)
+    assert a.shared_prefix(0, 1) == []
+    assert b.shared_prefix(0, 1) == []                # used to diverge
+
+
+def test_noisy_tenant_recycling_stays_in_its_namespace():
+    """Per-namespace prime recycling: a tenant exhausting its pools
+    recycles its OWN LRU elements; the other tenant's bindings,
+    composites, and prefetch behavior are untouched."""
+    ns = TenantNamespace(2, ranges={
+        CacheLevel.L1: (2, 13), CacheLevel.L2: (17, 97),
+        CacheLevel.L3: (101, 199), CacheLevel.MEM: (211, None)})
+    caches = [cls(hbm_pages=8, page_size=4, prefetch_budget=2, qos=2,
+                  namespace=TenantNamespace(2, ranges=ns.ranges))
+              for cls in (TenantedPagedKVCache,
+                          TenantedVectorizedPagedKVCache)]
+    tiers = []
+    for kv in caches:
+        kv.register_request(1000, list(range(500, 516)), tenant=1)
+        quiet = {pid: kv.assigner.prime_of(pid)
+                 for pid in kv.chains[1000]}
+        t = []
+        for r in range(30):          # churn tenant 0 through its pools
+            # mark the upcoming pages hot so exhaustion takes the
+            # recycle path (freq > 0.3 needs two records)
+            for k in range(6):
+                kv.assigner.per_tenant[0].tracker.record(kv._next_page + k)
+                kv.assigner.per_tenant[0].tracker.record(kv._next_page + k)
+            kv.register_request(r, [r * 40 + k for k in range(16)],
+                                tenant=0)
+            t.extend(kv.touch_batch(
+                [(r, j) for j in range(len(kv.chains[r]))]))
+        tiers.append(t)
+        assert kv.assigner.per_tenant[0].stats.recycle_events > 0
+        assert kv.assigner.per_tenant[1].stats.recycle_events == 0
+        # tenant 1's bindings survived tenant 0's churn exactly
+        assert {pid: kv.assigner.prime_of(pid)
+                for pid in kv.chains[1000]} == quiet
+        kv.namespace.assert_isolated(kv.registry)
+    assert tiers[0] == tiers[1]
+    a, b = caches
+    assert a.stats.parity_tuple() == b.stats.parity_tuple()
+    assert a.prefetch_log == b.prefetch_log
+    assert list(a.hbm.items()) == list(b.hbm.items())
+
+
+# --------------------------------------------------------------------------- #
+# tenanted MoE expert tier                                                    #
+# --------------------------------------------------------------------------- #
+
+def test_expert_tenancy_differential_and_isolation():
+    """Tenanted expert caches: scalar oracle == vec on counters, tiers,
+    LRU order, and prefetch log; router sets spanning tenants are split
+    before registration so the registry stays isolated."""
+    from strategies import ExpertWorkloadSpec, build_expert_sets
+
+    spec = ExpertWorkloadSpec(seed=2, n_experts=24, n_steps=50, batch=3,
+                              group_size=5, n_groups=10, oversize_every=4)
+    batches = build_expert_sets(spec)
+    a = TenantedExpertCache(24, hbm_slots=9, prefetch_budget=3, qos=3)
+    b = TenantedVectorizedExpertCache(24, hbm_slots=9, prefetch_budget=3,
+                                      qos=3)
+    tiers = []
+    for ec in (a, b):
+        t = []
+        for batch in batches:
+            ec.observe_routing(batch)
+            for d in ec.activate_batch(batch):
+                t.append(tuple(sorted(d.items())))
+        tiers.append(t)
+    assert tiers[0] == tiers[1]
+    assert a.stats.parity_tuple() == b.stats.parity_tuple()
+    assert list(a.hbm.items()) == list(b.hbm.items())
+    assert a.prefetch_log == b.prefetch_log
+    assert a.cross_tenant_groups == b.cross_tenant_groups > 0
+    assert a.cross_tenant_prefetches() == 0 == b.cross_tenant_prefetches()
+    for ec in (a, b):
+        ec.namespace.assert_isolated(ec.registry)
+        assert (ec.qos.occupancy <= ec.qos.quota).all()
+    # Theorem 1, tenant-scoped: every prefetch target is in the
+    # factorization-recovered co-fire set of its source
+    for src, tgt in a.prefetch_log:
+        assert tgt in a.coactivated(src)
+
+
+def test_expert_quota_one_slot_per_tenant():
+    a = TenantedExpertCache(8, hbm_slots=2, prefetch_budget=2, qos=2)
+    b = TenantedVectorizedExpertCache(8, hbm_slots=2, prefetch_budget=2,
+                                      qos=2)
+    sets = [(0, 1, 2), (4, 5, 6), (2, 3), (6, 7), (0, 1), (5, 4)]
+    for ec in (a, b):
+        ec.observe_routing(sets)
+        ec.activate_batch(sets)
+        assert (ec.qos.occupancy <= 1).all()
+    assert a.stats.parity_tuple() == b.stats.parity_tuple()
+    assert list(a.hbm.items()) == list(b.hbm.items())
+    assert a.prefetch_log == b.prefetch_log
+
+
+# --------------------------------------------------------------------------- #
+# serving engine tenants= mode                                                #
+# --------------------------------------------------------------------------- #
+
+def _tenant_engine_workload(eng, n_req=24, seed=0, tenants=3):
+    rng = np.random.default_rng(seed)
+    for r in range(n_req):
+        eng.submit(list(rng.integers(0, 500,
+                                     size=int(rng.integers(8, 48)))),
+                   max_new_tokens=6, tenant=r % tenants)
+    return eng.run_until_idle()
+
+
+def test_engine_tenants_mode_vec_scalar_parity():
+    engines = {kv: ServingEngine(None, None, max_batch=8, page_size=8,
+                                 hbm_pages=24, kv=kv, prefetch_budget=3,
+                                 reread_window=2, tenants=3)
+               for kv in ("vec", "scalar")}
+    done = {kv: _tenant_engine_workload(e) for kv, e in engines.items()}
+    gen = {kv: [(r.req_id, tuple(r.generated)) for r in
+                sorted(ds, key=lambda r: r.req_id)]
+           for kv, ds in done.items()}
+    assert gen["vec"] == gen["scalar"]
+    ev, es = engines["vec"].pages, engines["scalar"].pages
+    assert ev.stats.parity_tuple() == es.stats.parity_tuple()
+    assert ev.prefetch_log == es.prefetch_log
+    assert ev.stats.registry_scans == 0
+    for t in range(3):
+        assert (ev.qos.tenant_stats[t].parity_tuple()
+                == es.qos.tenant_stats[t].parity_tuple())
+    assert ev.cross_tenant_prefetches() == 0
+    ev.namespace.assert_isolated(ev.registry)
+    # per-tenant stats partition the engine-visible totals
+    for f in PARITY_COUNTERS:
+        assert sum(getattr(s, f) for s in ev.qos.tenant_stats) \
+            == getattr(ev.stats, f), f
+
+
+def test_engine_tenants_mode_rejects_bad_usage():
+    eng = ServingEngine(None, None, max_batch=4, hbm_pages=16)
+    with pytest.raises(ValueError):
+        eng.submit([1, 2, 3], tenant=1)      # tenants= mode not enabled
+    with pytest.raises(ValueError):
+        ServingEngine(None, None, max_batch=4, hbm_pages=16, kv="magic",
+                      tenants=2)
+    # out-of-range tenant must fail AT SUBMIT: failing later inside
+    # _admit left a permanently-running slot holding an unregistered
+    # request (regression)
+    eng2 = ServingEngine(None, None, max_batch=4, hbm_pages=16, tenants=2)
+    with pytest.raises(ValueError):
+        eng2.submit([1, 2, 3], tenant=2)
+    assert not eng2.queue                    # nothing half-enqueued
+    eng2.submit([1, 2, 3], max_new_tokens=2, tenant=1)
+    assert len(eng2.run_until_idle()) == 1   # engine still serves
+
+
+def test_engine_tenants_step_reports_tenant_stats():
+    eng = ServingEngine(None, None, max_batch=4, page_size=8, hbm_pages=16,
+                        tenants=2)
+    eng.submit(list(range(24)), max_new_tokens=3, tenant=1)
+    out = {}
+    while eng.queue or any(s is not None for s in eng.slots):
+        out = eng.step()
+    assert "tenant_stats" in out and len(out["tenant_stats"]) == 2
+    st1 = out["tenant_stats"][1]
+    assert st1.hbm_hits + st1.host_hits + st1.misses > 0
