@@ -18,7 +18,7 @@ from repro.core import (DEFAULT_COSTS, db_join_trace, hft_trace,
                         simulate_semantic)
 from repro.core.pfcs_cache import PFCSCache
 
-from .common import emit, save_json
+from .common import emit, save_bench, save_json
 
 
 def case_db(seed: int = 0):
@@ -250,6 +250,147 @@ def case_serving(smoke: bool = False, shards=None):
            for k, v in res.items()}
     out["vec_vs_scalar_speedup"] = speedup
     save_json("case_serving", out)
+    save_bench("case_serving", {
+        "wall_s": {k: res[k]["wall_s"] for k in res},
+        "tok_per_s": {k: res[k]["tok_per_s"] for k in res},
+        "hbm_hit_rate": {k: res[k]["hbm_hit_rate"] for k in res},
+        "prefetch_hit_rate": {k: res[k]["prefetch_hit_rate"] for k in res},
+        "registry_scans": {k: res[k]["registry_scans"] for k in res},
+        "vec_vs_scalar_speedup": speedup,
+    })
+    return out
+
+
+def case_elastic(smoke: bool = False):
+    """Elastic resharding + shard-loss recovery under serving load
+    (DESIGN.md §9).
+
+    Runs the IDENTICAL request stream twice through the null-model
+    engine:
+
+      * ``scalar``  — uninterrupted scalar-oracle run;
+      * ``elastic`` — :class:`~repro.serving.elastic.
+        ElasticShardedPagedKVCache` hit mid-serve by a resize storm
+        (2 -> 4 -> 2 -> ...) plus a shard-loss schedule: periodic kills
+        with measured recovery latency, and one deferred kill whose
+        shard is rebuilt lazily by failover-on-demand at the next touch.
+
+    Reports recovery latency, migrated bytes vs the naive full-rebuild
+    baseline (a resize that re-registered every composite), and hit
+    rates; asserts bit-exact parity between the two runs — every chaos
+    event must be invisible to placement, tokens, and counters — and
+    that the incremental migration moved strictly less than a rebuild.
+    """
+    from repro.serving.engine import ServingEngine
+
+    if smoke:
+        n_req, max_batch, max_new = 64, 16, 8
+        hbm, shared_tok, window = 24, 64, 2
+    else:
+        n_req, max_batch, max_new = 192, 64, 16
+        hbm, shared_tok, window = 128, 96, 3
+
+    def build(kv: str) -> ServingEngine:
+        rng = np.random.default_rng(0)
+        eng = ServingEngine(None, None, max_batch=max_batch, page_size=8,
+                            hbm_pages=hbm, kv=kv, prefetch_budget=4,
+                            reread_window=window, shards=2)
+        groups = [list(rng.integers(0, 30_000, size=shared_tok))
+                  for _ in range(max(1, n_req // 8))]
+        for r in range(n_req):
+            tail = list(rng.integers(0, 30_000,
+                                     size=int(rng.integers(48, 129))))
+            eng.submit(groups[r % len(groups)] + tail,
+                       max_new_tokens=max_new)
+        return eng
+
+    def drain(eng: ServingEngine, chaos: bool):
+        done, step = [], 0
+        recovery_s = []
+        t0 = time.perf_counter()
+        while eng.queue or any(s is not None for s in eng.slots):
+            if chaos:
+                if step % 3 == 2:               # resize storm: 2<->4
+                    eng.resize(4 if eng.pages.n_shards == 2 else 2)
+                if step % 4 == 1:               # kill + timed recovery
+                    t1 = time.perf_counter()
+                    eng.fail_shard(step % eng.pages.n_shards)
+                    recovery_s.append(time.perf_counter() - t1)
+                if step == 5:                   # failover-on-demand path
+                    eng.fail_shard(0, recover=False)
+            before = list(eng.slots)
+            eng.step()
+            done.extend(r for r in before
+                        if r is not None and r.state == "done")
+            step += 1
+        return done, time.perf_counter() - t0, recovery_s
+
+    oracle = build("scalar")
+    done_o, wall_o, _ = drain(oracle, chaos=False)
+    eng = build("elastic")
+    done_e, wall_e, recovery_s = drain(eng, chaos=True)
+
+    # chaos must be invisible: tokens, counters, LRU order, prefetch log
+    key = lambda rs: [(r.req_id, tuple(r.generated))
+                      for r in sorted(rs, key=lambda r: r.req_id)]
+    assert key(done_e) == key(done_o), \
+        "elastic chaos run diverged from the uninterrupted oracle"
+    st_e, st_o = eng.pages.stats, oracle.pages.stats
+    assert st_e.parity_tuple() == st_o.parity_tuple(), \
+        "elastic counters diverged from the scalar oracle"
+    assert list(eng.pages.hbm.items()) == list(oracle.pages.hbm.items())
+    assert eng.pages.prefetch_log == oracle.pages.prefetch_log
+    assert st_e.registry_scans == 0
+    assert (eng.pages.aggregate_shard_stats().parity_tuple()
+            == st_e.parity_tuple())
+
+    plans = eng.pages.reshard_log
+    migrated = sum(p.migrated_bytes for p in plans)
+    full_rebuild = sum(p.full_rebuild_bytes for p in plans)
+    moved = sum(len(p.moved) for p in plans)
+    assert plans and moved > 0, \
+        "resize storm never moved a block — workload too small"
+    assert migrated < full_rebuild, \
+        "incremental migration must beat the naive full rebuild"
+    reports = eng.pages.recovery_log
+    assert eng.pages.recoveries >= 2 and reports
+    assert any(r.mode == "partial" for r in reports)
+
+    out = dict(
+        wall_s_oracle=wall_o, wall_s_elastic=wall_e,
+        tok_per_s=sum(len(r.generated) for r in done_e)
+        / max(wall_e, 1e-9),
+        n_resizes=len(plans), n_recoveries=eng.pages.recoveries,
+        moved_blocks=moved,
+        migrated_bytes=migrated, full_rebuild_bytes=full_rebuild,
+        migrated_ratio=migrated / max(full_rebuild, 1),
+        recovery_latency_mean_s=float(np.mean(recovery_s)),
+        recovery_latency_max_s=float(np.max(recovery_s)),
+        refactorized=sum(r.refactorized for r in reports),
+        rows_rebuilt=sum(r.rows_rebuilt for r in reports),
+        hbm_hit_rate=st_e.hbm_hit_rate,
+        prefetch_hit_rate=st_e.prefetch_hit_rate,
+    )
+    print("\n== Case study: elastic serving (resize storm + shard loss, "
+          f"{n_req} requests, {len(plans)} resizes, "
+          f"{eng.pages.recoveries} recoveries) ==")
+    print(f"  parity with uninterrupted oracle: EXACT "
+          f"(tiers/counters/LRU/prefetch-log)")
+    print(f"  migrated {migrated} B over {moved} moved blocks vs "
+          f"{full_rebuild} B naive full rebuild "
+          f"({100 * out['migrated_ratio']:.1f}%)")
+    print(f"  recovery latency mean {out['recovery_latency_mean_s']*1e3:.2f}"
+          f" ms  max {out['recovery_latency_max_s']*1e3:.2f} ms  "
+          f"({out['refactorized']} composites refactorized, "
+          f"{out['rows_rebuilt']} rows rebuilt)")
+    emit("case_elastic.migrated_bytes", migrated)
+    emit("case_elastic.full_rebuild_bytes", full_rebuild)
+    emit("case_elastic.migrated_ratio_pct", out["migrated_ratio"] * 100)
+    emit("case_elastic.recovery_latency_ms",
+         out["recovery_latency_mean_s"] * 1e3)
+    emit("case_elastic.tok_per_s", out["tok_per_s"])
+    save_json("case_elastic", out)
+    save_bench("case_elastic", out)
     return out
 
 

@@ -19,7 +19,8 @@ def main(argv=None) -> None:
                     help="paper-scale trial counts (slower)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-scale CI subset: Table 1 at reduced scale "
-                         "plus the serving load case, the MoE "
+                         "plus the serving load case, the elastic "
+                         "resize/recovery chaos case, the MoE "
                          "expert-serving case, and the multi-tenant QoS "
                          "case (exercises every serving hot path on "
                          "every PR)")
@@ -45,6 +46,7 @@ def main(argv=None) -> None:
     if args.smoke:
         table1.run(n_trials=1, trace_scale=0.2)
         cases.case_serving(smoke=True, shards=shards)
+        cases.case_elastic(smoke=True)
         cases.case_moe(smoke=True)
         cases.case_tenancy(smoke=True)
         print(f"\ntotal benchmark wall time: {time.time() - t0:.1f}s")
@@ -57,6 +59,7 @@ def main(argv=None) -> None:
     cases.case_ml()
     cases.case_hft()
     cases.case_serving(shards=shards)
+    cases.case_elastic()
     cases.case_moe()
     cases.case_tenancy()
     kernel_bench.run()

@@ -79,6 +79,14 @@ class CompositeRegistry:
     """
 
     def __init__(self, factorizer: Optional[Factorizer] = None, max_bits: int = 62):
+        if not 1 < max_bits <= 63:
+            # a chunk in [2**63, 2**64) would register fine and then wrap
+            # (or raise) only later, when composites_array() materializes
+            # the int64 kernel view — reject the misconfiguration at
+            # construction so deep-chain registration can never corrupt
+            raise ValueError(
+                f"max_bits must be in (1, 63] so every composite chunk "
+                f"fits a signed int64 kernel word, got {max_bits}")
         self.factorizer = factorizer or Factorizer()
         self.max_bits = max_bits
         self._next_id = 0

@@ -260,6 +260,8 @@ def sharded_successor_table(registry, assigner, data_ids: Sequence[int],
                             partition: PrimeSpacePartition,
                             mesh=None,
                             report: Optional[ShardScanReport] = None,
+                            precomputed: Optional[Tuple[List[List[int]],
+                                                        List[int]]] = None,
                             ) -> Dict[int, List[int]]:
     """Mesh-partitioned twin of :func:`repro.core.engine.successor_table`.
 
@@ -269,6 +271,14 @@ def sharded_successor_table(registry, assigner, data_ids: Sequence[int],
     ownership: each shard's Pallas divisibility scan touches only its
     local registry slice, and only cross-shard relationships ride the
     collective gcd exchange.
+
+    ``precomputed`` optionally supplies the ``(local_pos, cross_pos)``
+    registry split (e.g. the maintained
+    :class:`repro.sharding.reshard.ShardSlices` index) instead of the
+    O(registry) :meth:`PrimeSpacePartition.classify` walk.  Any split
+    that routes each position to a shard owning one of its chunk's
+    primes yields identical rows — a prime's hits can only come from the
+    chunk containing it.
     """
     from repro.kernels.ops import factorize_batch
 
@@ -280,7 +290,10 @@ def sharded_successor_table(registry, assigner, data_ids: Sequence[int],
         return {d: [] for d, _ in keyed}
 
     # ---- partition state: registry slices and query routing ------------- #
-    local_pos, cross_pos = partition.classify(registry)
+    if precomputed is not None:
+        local_pos, cross_pos = precomputed
+    else:
+        local_pos, cross_pos = partition.classify(registry)
     by_shard: List[List[Tuple[int, int]]] = [[] for _ in range(S)]
     for d, p in keyed:
         by_shard[partition.owner(p)].append((d, p))

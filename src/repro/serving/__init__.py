@@ -24,6 +24,9 @@ Public entry points (documented with runnable examples in docs/api.md):
   * :class:`VectorizedExpertCache`  — array expert residency + bulk
     table-driven co-fire discovery (DESIGN.md §7, the MoE serving hot
     path; ``ServingEngine`` takes it with ``moe="vec"``)
+  * :class:`ElasticShardedPagedKVCache` — live resharding + shard-loss
+    recovery by refactorization (DESIGN.md §9; ``ServingEngine`` takes
+    it with ``kv="elastic"`` and exposes ``resize``/``fail_shard``)
 
 The vectorized and sharded caches must reproduce the oracle's
 ``PageStats`` / ``ExpertCacheStats`` counters bit-for-bit
@@ -32,6 +35,8 @@ The vectorized and sharded caches must reproduce the oracle's
 discipline of ``tests/test_engine.py``.
 """
 
+from .elastic import (ElasticController, ElasticShardedPagedKVCache,
+                      RecoveryReport)
 from .engine import Request, ServingEngine
 from .expert_cache import (EXPERT_PARITY_COUNTERS, ExpertCache,
                            ExpertCacheStats)
@@ -45,4 +50,5 @@ __all__ = [
     "EXPERT_PARITY_COUNTERS", "VectorizedExpertCache",
     "PagedKVCache", "PageStats", "PARITY_COUNTERS",
     "ShardedPagedKVCache", "VectorizedPagedKVCache",
+    "ElasticShardedPagedKVCache", "ElasticController", "RecoveryReport",
 ]

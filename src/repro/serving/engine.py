@@ -23,6 +23,12 @@ Three cache backends (``kv=``):
     ``("data", "model")`` mesh (``shards=N``), per-shard bulk
     discovery under ``shard_map`` (DESIGN.md §6); still bit-exact
     against the scalar oracle on every counter.
+  * ``"elastic"`` — :class:`~repro.serving.elastic.
+    ElasticShardedPagedKVCache`: the sharded cache with live
+    ``resize(shards=)`` / ``fail_shard()`` hooks (DESIGN.md §9);
+    shard-count changes migrate only moved prime blocks, shard losses
+    recover deterministically by re-factorization, and oracle parity
+    holds across every event.
 
 Two expert-cache backends for MoE workloads (``moe=``, default off):
 
@@ -58,6 +64,7 @@ from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from .elastic import ElasticShardedPagedKVCache
 from .expert_cache import ExpertCache
 from .expert_cache_vec import VectorizedExpertCache
 from .kv_cache import PagedKVCache
@@ -103,9 +110,9 @@ class ServingEngine:
         # per-tenant PageStats / prefetch logs
         self.tenants = tenants
         if tenants is not None:
-            from repro.tenancy.qos import (TenantedPagedKVCache,
-                                           TenantedShardedPagedKVCache,
-                                           TenantedVectorizedPagedKVCache)
+            from repro.tenancy.qos import (
+                TenantedElasticShardedPagedKVCache, TenantedPagedKVCache,
+                TenantedShardedPagedKVCache, TenantedVectorizedPagedKVCache)
             if kv == "vec":
                 self.pages: PagedKVCache = TenantedVectorizedPagedKVCache(
                     hbm_pages=hbm_pages, page_size=page_size,
@@ -119,9 +126,14 @@ class ServingEngine:
                     hbm_pages=hbm_pages, page_size=page_size,
                     prefetch_budget=prefetch_budget, n_shards=shards,
                     mesh=mesh, qos=tenants)
+            elif kv == "elastic":
+                self.pages = TenantedElasticShardedPagedKVCache(
+                    hbm_pages=hbm_pages, page_size=page_size,
+                    prefetch_budget=prefetch_budget, n_shards=shards,
+                    mesh=mesh, qos=tenants)
             else:
-                raise ValueError(f"kv must be 'vec', 'scalar' or 'sharded', "
-                                 f"got {kv!r}")
+                raise ValueError(f"kv must be 'vec', 'scalar', 'sharded' "
+                                 f"or 'elastic', got {kv!r}")
         elif kv == "vec":
             self.pages = VectorizedPagedKVCache(
                 hbm_pages=hbm_pages, page_size=page_size,
@@ -134,9 +146,13 @@ class ServingEngine:
             self.pages = ShardedPagedKVCache(
                 hbm_pages=hbm_pages, page_size=page_size,
                 prefetch_budget=prefetch_budget, n_shards=shards, mesh=mesh)
+        elif kv == "elastic":
+            self.pages = ElasticShardedPagedKVCache(
+                hbm_pages=hbm_pages, page_size=page_size,
+                prefetch_budget=prefetch_budget, n_shards=shards, mesh=mesh)
         else:
-            raise ValueError(f"kv must be 'vec', 'scalar' or 'sharded', "
-                             f"got {kv!r}")
+            raise ValueError(f"kv must be 'vec', 'scalar', 'sharded' or "
+                             f"'elastic', got {kv!r}")
         # MoE expert-weight tier (DESIGN.md §7); router feed is the real
         # model router when the model is a MoE arch, a deterministic
         # synthetic schedule in load-generator mode
@@ -211,6 +227,31 @@ class ServingEngine:
         # the last `reread_window` pages of the chain, oldest first (paged
         # attention touches the recent context window; 1 = tail only)
         self.reread_window = max(1, int(reread_window))
+
+    # ------------------------------------------------------------------ #
+    # elastic hooks (kv="elastic"; DESIGN.md §9)                          #
+    # ------------------------------------------------------------------ #
+
+    def _elastic_pages(self) -> ElasticShardedPagedKVCache:
+        if not isinstance(self.pages, ElasticShardedPagedKVCache):
+            raise ValueError("resize/fail_shard need kv='elastic'")
+        return self.pages
+
+    def resize(self, shards: int, mesh="auto"):
+        """Live shard-count change mid-serve; returns the
+        :class:`~repro.sharding.reshard.ReshardPlan` (only moved blocks'
+        registry slices migrate — placement and parity are untouched)."""
+        return self._elastic_pages().resize(shards, mesh=mesh)
+
+    def fail_shard(self, shard: int, recover: bool = True):
+        """Inject a shard loss mid-serve.  With ``recover=True`` the
+        dead shard's discovery state is immediately rebuilt by
+        re-factorizing surviving composites (returns the
+        :class:`~repro.serving.elastic.RecoveryReport`); otherwise
+        recovery happens automatically before the next decode step."""
+        pages = self._elastic_pages()
+        pages.fail_shard(shard)
+        return pages.recover_shard(shard) if recover else None
 
     # ------------------------------------------------------------------ #
 

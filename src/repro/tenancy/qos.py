@@ -46,6 +46,7 @@ import numpy as np
 from repro.core.primes import CacheLevel
 from repro.serving.expert_cache import ExpertCache
 from repro.serving.expert_cache_vec import VectorizedExpertCache
+from repro.serving.elastic import ElasticShardedPagedKVCache
 from repro.serving.kv_cache import PARITY_COUNTERS, PagedKVCache, PageStats
 from repro.serving.kv_cache_sharded import ShardedPagedKVCache
 from repro.serving.kv_cache_vec import EMPTY, VectorizedPagedKVCache
@@ -55,7 +56,7 @@ from .namespace import TenantAssigner, TenantNamespace
 __all__ = [
     "weighted_quotas", "TenantQoSConfig", "QuotaState",
     "TenantedPagedKVCache", "TenantedVectorizedPagedKVCache",
-    "TenantedShardedPagedKVCache",
+    "TenantedShardedPagedKVCache", "TenantedElasticShardedPagedKVCache",
     "TenantedExpertCache", "TenantedVectorizedExpertCache",
 ]
 
@@ -378,6 +379,29 @@ class TenantedShardedPagedKVCache(_TenantedVecPlacement,
     functions of the same prime value, so the per-shard bulk rebuild
     and the collective gcd exchange run unchanged over the tenanted
     prime space."""
+
+    def __init__(self, hbm_pages: int = 1024, page_size: int = 16,
+                 prefetch_budget: int = 4, n_shards: int = 2,
+                 mesh="auto", stripes_per_shard: int = 8,
+                 qos: Union[int, TenantQoSConfig] = 2,
+                 namespace: Optional[TenantNamespace] = None):
+        self._setup_tenancy(qos, namespace, hbm_pages, prefetch_budget)
+        super().__init__(hbm_pages=hbm_pages, page_size=page_size,
+                         prefetch_budget=prefetch_budget, n_shards=n_shards,
+                         mesh=mesh, stripes_per_shard=stripes_per_shard)
+        self._init_slot_tenant()
+
+
+class TenantedElasticShardedPagedKVCache(_TenantedVecPlacement,
+                                         ElasticShardedPagedKVCache):
+    """Tenant namespaces composed with the ELASTIC sharded cache
+    (DESIGN.md §9): ``resize``/``fail_shard``/``recover_shard`` operate
+    purely on the shard striping of the prime space, while tenant
+    isolation/quotas stripe the SAME prime values over tenants — two
+    independent pure ownership functions, so no elastic event can move
+    a page across a tenant boundary.  The chaos fuzz asserts the
+    namespace isolation checker after every recovery
+    (``tests/test_elastic.py``)."""
 
     def __init__(self, hbm_pages: int = 1024, page_size: int = 16,
                  prefetch_budget: int = 4, n_shards: int = 2,

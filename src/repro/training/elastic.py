@@ -31,9 +31,30 @@ import math
 import time
 from collections import defaultdict, deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
-__all__ = ["FleetState", "MeshPlan", "ElasticPlanner", "StragglerMonitor"]
+__all__ = ["FleetState", "ManualClock", "MeshPlan", "ElasticPlanner",
+           "StragglerMonitor"]
+
+
+class ManualClock:
+    """Deterministic injectable clock for tests and chaos harnesses.
+
+    Call it like ``time.monotonic`` (returns the current simulated
+    time); ``advance(dt)`` moves time forward.  ``FleetState``,
+    ``StragglerMonitor``, and ``serving.elastic.ElasticController`` all
+    accept a ``clock=`` so no test path ever reads the wall clock.
+    """
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        self.t += float(dt)
+        return self.t
 
 
 @dataclass
@@ -41,20 +62,28 @@ class FleetState:
     n_nodes: int
     chips_per_node: int = 4
     heartbeat_timeout_s: float = 30.0
+    clock: Callable[[], float] = time.monotonic
     _last_seen: Dict[int, float] = field(default_factory=dict)
     _failed: set = field(default_factory=set)
 
     def heartbeat(self, node: int, t: Optional[float] = None) -> None:
         if node not in self._failed:
-            self._last_seen[node] = t if t is not None else time.monotonic()
+            self._last_seen[node] = t if t is not None else self.clock()
 
     def mark_failed(self, node: int) -> None:
         self._failed.add(node)
         self._last_seen.pop(node, None)
 
+    def join(self, node: int, t: Optional[float] = None) -> None:
+        """(Re-)admit a node — a replacement host or an elastic grow.
+        Clears any failed mark and heartbeats it immediately."""
+        self._failed.discard(node)
+        self.n_nodes = max(self.n_nodes, node + 1)
+        self.heartbeat(node, t)
+
     def sweep(self, now: Optional[float] = None) -> List[int]:
         """Expire silent nodes; returns newly-failed node ids."""
-        now = now if now is not None else time.monotonic()
+        now = now if now is not None else self.clock()
         newly = [n for n, t in self._last_seen.items()
                  if now - t > self.heartbeat_timeout_s]
         for n in newly:
@@ -125,16 +154,31 @@ class ElasticPlanner:
 
 class StragglerMonitor:
     def __init__(self, threshold: float = 1.5, window: int = 20,
-                 evict_after: int = 3):
+                 evict_after: int = 3,
+                 clock: Callable[[], float] = time.monotonic):
         self.threshold = threshold
         self.window = window
         self.evict_after = evict_after
+        self.clock = clock
         self._times: Dict[int, Deque[float]] = defaultdict(
             lambda: deque(maxlen=window))
         self._strikes: Dict[int, int] = defaultdict(int)
+        self._last_tick: Dict[int, float] = {}
 
     def record(self, node: int, step_time_s: float) -> None:
         self._times[node].append(step_time_s)
+
+    def tick(self, node: int) -> Optional[float]:
+        """Record a step boundary for ``node`` from the injected clock;
+        returns the measured step time (``None`` on the first tick)."""
+        now = self.clock()
+        last = self._last_tick.get(node)
+        self._last_tick[node] = now
+        if last is None:
+            return None
+        dt = now - last
+        self.record(node, dt)
+        return dt
 
     def _medians(self) -> Dict[int, float]:
         out = {}

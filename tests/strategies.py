@@ -44,6 +44,8 @@ __all__ = [
     "KVWorkloadSpec", "build_kv_ops", "apply_kv_ops", "drive_kv",
     "kv_workload_specs", "trace_zoo", "trace_specs", "make_trace",
     "adversarial_trace", "adversarial_stream_specs",
+    "ElasticEventSpec", "build_failure_schedule", "apply_elastic_event",
+    "elastic_event_specs",
     "ExpertWorkloadSpec", "build_expert_sets", "drive_expert",
     "expert_workload_specs",
     "TenantMixSpec", "build_tenant_requests", "drive_tenants",
@@ -109,14 +111,28 @@ def build_kv_ops(spec: KVWorkloadSpec) -> List[Tuple]:
     return ops
 
 
-def apply_kv_ops(kv, ops: Sequence[Tuple]) -> List[str]:
+def apply_kv_ops(kv, ops: Sequence[Tuple], schedule=None,
+                 on_event=None) -> List[str]:
     """Replay an abstract op list against one cache; returns the tier
-    string of every touch (the differential-comparison payload)."""
+    string of every touch (the differential-comparison payload).
+
+    ``schedule`` (a :func:`build_failure_schedule` dict: op index ->
+    event list) injects chaos events BEFORE the op at that index.  Each
+    event goes through ``on_event(kv, event)`` when given, else
+    :func:`apply_elastic_event` — which no-ops kill/resize on caches
+    without elastic hooks, so the SAME schedule replays against the
+    scalar oracle and the elastic cache (the parity contract's whole
+    point: elastic events must be invisible to placement).
+    """
     from repro.core.primes import CacheLevel
 
     tiers: List[str] = []
     live: List[int] = []
-    for op in ops:
+    fire = on_event if on_event is not None else apply_elastic_event
+    for i, op in enumerate(ops):
+        if schedule:
+            for ev in schedule.get(i, ()):
+                fire(kv, ev)
         kind = op[0]
         if kind == "register":
             _, rid, tokens = op
@@ -195,6 +211,111 @@ def kv_workload_specs():
 
 
 # --------------------------------------------------------------------------- #
+# chaos fault-injection schedules (elastic tier)                              #
+# --------------------------------------------------------------------------- #
+
+@dataclass(frozen=True)
+class ElasticEventSpec:
+    """Compact description of a chaos fault-injection schedule; expanded
+    by :func:`build_failure_schedule` into op-indexed events for
+    :func:`apply_kv_ops` / :func:`drive_tenants` (the elastic chaos
+    fuzz's input — tests/test_elastic.py)."""
+
+    seed: int = 0
+    n_events: int = 4
+    kill: bool = True              # shard loss (fail_shard)
+    defer: bool = True             # some kills recover lazily (next touch)
+    resize: bool = True            # live shard-count changes
+    straggle: bool = False         # slow-node reports (controller-driven)
+    drop: bool = False             # out-of-band Algorithm-1 prime drops
+    shard_choices: Tuple[int, ...] = (2, 4)
+
+
+def build_failure_schedule(spec: ElasticEventSpec, n_ops: int):
+    """Expand a spec into ``{op_index: [event, ...]}`` (events fire
+    before the op at that index).  Event tuples:
+
+      ("kill", sel, deferred)  — fail shard sel % n_shards; recover
+                                 immediately unless ``deferred`` (then
+                                 failover-on-demand recovers it at the
+                                 next touch)
+      ("resize", n)            — live re-stripe to n shards
+      ("straggle", sel, slow)  — node sel reports ``slow``x step times
+                                 (meaningful only via a controller's
+                                 StragglerMonitor; placement no-op)
+      ("drop", sel)            — assigner.release a page's prime — a
+                                 WORKLOAD mutation, applied identically
+                                 to every cache incl. the oracle
+    """
+    rng = np.random.default_rng(spec.seed)
+    kinds = ([("kill",)] if spec.kill else []) \
+        + ([("resize",)] if spec.resize else []) \
+        + ([("straggle",)] if spec.straggle else []) \
+        + ([("drop",)] if spec.drop else [])
+    schedule: dict = {}
+    if not kinds or n_ops < 2:
+        return schedule
+    for _ in range(spec.n_events):
+        idx = int(rng.integers(1, n_ops))
+        (kind,) = kinds[int(rng.integers(len(kinds)))]
+        if kind == "kill":
+            ev = ("kill", int(rng.integers(1 << 30)),
+                  bool(spec.defer and rng.integers(2)))
+        elif kind == "resize":
+            ev = ("resize", int(spec.shard_choices[
+                int(rng.integers(len(spec.shard_choices)))]))
+        elif kind == "straggle":
+            ev = ("straggle", int(rng.integers(1 << 30)),
+                  float(2.0 + rng.integers(4)))
+        else:
+            ev = ("drop", int(rng.integers(1 << 30)))
+        schedule.setdefault(idx, []).append(ev)
+    return schedule
+
+
+def apply_elastic_event(kv, ev: Tuple) -> None:
+    """Default chaos-event dispatcher.  Elastic-only events (kill,
+    resize) no-op on caches without the hooks — the oracle replays the
+    same schedule and must end bit-identical; ``drop`` mutates the
+    workload itself, so it applies to EVERY cache."""
+    from repro.core.primes import CacheLevel
+
+    kind = ev[0]
+    if kind == "kill":
+        if hasattr(kv, "fail_shard"):
+            s = ev[1] % kv.n_shards
+            kv.fail_shard(s)
+            if not ev[2]:
+                kv.recover_shard(s)
+    elif kind == "resize":
+        if hasattr(kv, "resize") and ev[1] != getattr(kv, "n_shards", None):
+            kv.resize(ev[1])
+    elif kind == "straggle":
+        pass                        # needs a controller; placement no-op
+    elif kind == "drop":
+        if kv._next_page:
+            kv.assigner.release(ev[1] % kv._next_page, CacheLevel.L2)
+    else:                           # pragma: no cover - builder invariant
+        raise ValueError(f"unknown event {kind!r}")
+
+
+def elastic_event_specs():
+    """Strategy over chaos schedules: kill/resize mixes with deferred
+    recoveries, optional straggler reports and prime drops."""
+    return st.builds(
+        ElasticEventSpec,
+        seed=st.integers(min_value=0, max_value=2**16),
+        n_events=st.integers(min_value=1, max_value=6),
+        kill=st.booleans(),
+        defer=st.booleans(),
+        resize=st.booleans(),
+        straggle=st.just(False),
+        drop=st.booleans(),
+        shard_choices=st.just((2, 4)),
+    )
+
+
+# --------------------------------------------------------------------------- #
 # multi-tenant workloads (tenancy tier)                                       #
 # --------------------------------------------------------------------------- #
 
@@ -264,18 +385,24 @@ def build_tenant_requests(spec: TenantMixSpec) -> List[Tuple]:
     return ops
 
 
-def drive_tenants(kv, ops: Sequence[Tuple], step_hook=None) -> List[str]:
+def drive_tenants(kv, ops: Sequence[Tuple], step_hook=None,
+                  schedule=None, on_event=None) -> List[str]:
     """Replay a tenant-tagged op list against one tenanted cache;
     returns every touch's tier string (the differential-comparison
     payload).  ``step_hook(kv)``, when given, runs after EVERY op — the
     tenancy fuzz passes the namespace isolation checker here so the
     invariant is proven at every intermediate state, not just at the
-    end."""
+    end.  ``schedule``/``on_event`` inject chaos events exactly as in
+    :func:`apply_kv_ops` (the elastic x tenancy composition fuzz)."""
     from repro.core.primes import CacheLevel
 
     tiers: List[str] = []
     live: List[int] = []
-    for op in ops:
+    fire = on_event if on_event is not None else apply_elastic_event
+    for i, op in enumerate(ops):
+        if schedule:
+            for ev in schedule.get(i, ()):
+                fire(kv, ev)
         kind = op[0]
         if kind == "register":
             _, rid, tenant, tokens = op

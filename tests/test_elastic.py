@@ -1,0 +1,453 @@
+"""Chaos fault-injection fuzz: elastic resharding + deterministic
+shard-loss recovery (DESIGN.md §9).
+
+The executable form of the paper's determinism guarantee under failure:
+Theorem 1 (exact recovery of relationships by factorization) implies a
+lost shard's discovery state is fully reconstructible from surviving
+composites — so a serving run interrupted by kills, resizes, and
+straggler evictions must end BIT-EXACT with an uninterrupted
+scalar-oracle run.  Discipline (extends tests/test_serving_sharded.py):
+
+  * the same abstract op stream (``strategies.build_kv_ops``) replays
+    against the scalar oracle, the vectorized cache, and the elastic
+    sharded cache; the elastic cache additionally absorbs a randomized
+    fault schedule (``strategies.build_failure_schedule``) — kill with
+    immediate or deferred recovery, live 2<->4 resizes, prime drops
+    (drops are workload mutations and apply to every cache);
+  * after every event and at the end: all ``PARITY_COUNTERS``, per-touch
+    tiers, exact HBM LRU order, host set, and prefetch logs match the
+    oracle; per-shard stats still aggregate to the global stats; the
+    maintained slice index equals a from-scratch classification;
+  * every recovery's rebuilt successor rows equal ``successor_table``
+    recomputed from scratch on exactly those pages (the
+    recovery-as-refactorization invariant);
+  * composed with tenancy: the namespace isolation checker passes after
+    EVERY op and every recovery;
+  * fleet plumbing (``ElasticController`` + ``FleetState`` +
+    ``StragglerMonitor`` + ``ElasticPlanner``) runs on an injectable
+    ``ManualClock`` — no wall-clock reads anywhere in the test paths.
+"""
+
+import numpy as np
+import pytest
+
+from strategies import (ElasticEventSpec, KVWorkloadSpec, TenantMixSpec,
+                        apply_elastic_event, apply_kv_ops,
+                        build_failure_schedule, build_kv_ops,
+                        build_tenant_requests, drive_tenants,
+                        elastic_event_specs, given, kv_workload_specs,
+                        settings, st)
+from repro.core.engine import successor_table
+from repro.core.engine.shard import PrimeSpacePartition
+from repro.serving.elastic import ElasticController, ElasticShardedPagedKVCache
+from repro.serving.kv_cache import PARITY_COUNTERS, PagedKVCache
+from repro.serving.kv_cache_vec import VectorizedPagedKVCache
+from repro.sharding.reshard import CROSS, LOST, ShardSlices
+from repro.training.elastic import ManualClock
+
+
+def _assert_state_parity(kv, oracle, name: str) -> None:
+    for f in PARITY_COUNTERS:
+        assert getattr(kv.stats, f) == getattr(oracle.stats, f), (name, f)
+    assert list(kv.hbm.items()) == list(oracle.hbm.items()), name
+    assert kv.host == oracle.host, name
+    assert kv.prefetch_log == oracle.prefetch_log, name
+
+
+def _assert_recovery_invariant(kv: ElasticShardedPagedKVCache) -> None:
+    """The last recovery's rebuilt rows == successor_table from scratch
+    on exactly those pages (recovery-as-refactorization, Theorem 1)."""
+    if not kv.recovery_log or kv.dead_shards:
+        return
+    rep = kv.recovery_log[-1]
+    fresh = successor_table(kv.registry, kv.assigner, rep.pages,
+                            discover="host")
+    for d in rep.pages:
+        got = [int(x) for x in kv._succ[d, :kv._succ_len[d]]]
+        assert got == fresh.get(d, []), (rep.shard, d)
+
+
+def _chaos_differential(spec: KVWorkloadSpec, espec: ElasticEventSpec,
+                        hbm: int, budget: int) -> None:
+    """Replay one workload; the elastic cache absorbs the fault schedule
+    while the oracle runs uninterrupted (sharing only workload-mutating
+    drop events) — end state must be bit-exact."""
+    ops = build_kv_ops(spec)
+    schedule = build_failure_schedule(espec, len(ops))
+
+    def elastic_event(kv, ev):
+        apply_elastic_event(kv, ev)
+        if ev[0] == "kill" and not ev[2]:
+            _assert_recovery_invariant(kv)
+            assert not kv.dead_shards
+        if ev[0] == "resize":
+            assert kv.n_shards == ev[1]
+            assert len(kv.shard_stats) == ev[1]
+
+    caches = {
+        "scalar": PagedKVCache(hbm_pages=hbm, page_size=4,
+                               prefetch_budget=budget),
+        "vec": VectorizedPagedKVCache(hbm_pages=hbm, page_size=4,
+                                      prefetch_budget=budget),
+        "elastic": ElasticShardedPagedKVCache(hbm_pages=hbm, page_size=4,
+                                              prefetch_budget=budget,
+                                              n_shards=2),
+    }
+    tiers = {
+        name: apply_kv_ops(kv, ops, schedule=schedule,
+                           on_event=elastic_event if name == "elastic"
+                           else None)
+        for name, kv in caches.items()}
+    oracle = caches["scalar"]
+    for name in ("vec", "elastic"):
+        kv = caches[name]
+        assert tiers[name] == tiers["scalar"], name
+        _assert_state_parity(kv, oracle, name)
+        assert kv.stats.registry_scans == 0, name
+    ekv = caches["elastic"]
+    # drain any deferred kill, then the deep invariants
+    ekv._sync_tables()
+    _assert_recovery_invariant(ekv)
+    assert not ekv.dead_shards
+    assert (ekv.aggregate_shard_stats().parity_tuple()
+            == ekv.stats.parity_tuple())
+    ekv.slices.sync(ekv.registry)
+    assert ekv.slices.verify(ekv.registry)
+
+
+# --------------------------------------------------------------------------- #
+# property-based chaos fuzz (hypothesis; clean SKIP without it)               #
+# --------------------------------------------------------------------------- #
+
+@given(spec=kv_workload_specs(), espec=elastic_event_specs(),
+       hbm=st.sampled_from([1, 4, 16]),
+       budget=st.integers(min_value=0, max_value=4))
+@settings(max_examples=10, deadline=None)
+def test_chaos_fuzz_property(spec, espec, hbm, budget):
+    """Any workload x any kill/resize/drop schedule: the elastic cache
+    ends bit-exact with the uninterrupted oracle."""
+    _chaos_differential(spec, espec, hbm, budget)
+
+
+# deterministic pinned cases: elastic edge paths stay covered even when
+# hypothesis is not installed (tier-1 must not lose this coverage)
+_PINNED = [
+    # deferred-recovery kills: failover happens on the next touch
+    (KVWorkloadSpec(seed=5, n_requests=10, n_touches=100),
+     ElasticEventSpec(seed=1, n_events=4, resize=False, defer=True), 4, 2),
+    # resize storm: repeated 2<->4 re-stripes mid-trace
+    (KVWorkloadSpec(seed=7, n_requests=12, n_touches=120, sweeps=2),
+     ElasticEventSpec(seed=2, n_events=6, kill=False), 8, 3),
+    # kills + resizes + registry drops interleaved, 1-slot HBM
+    (KVWorkloadSpec(seed=11, n_requests=9, n_touches=90, release=True),
+     ElasticEventSpec(seed=3, n_events=5, drop=True), 1, 2),
+    # registry drops only — the migrated registry-drop rebuild case
+    (KVWorkloadSpec(seed=13, n_requests=10, n_touches=100),
+     ElasticEventSpec(seed=4, n_events=4, kill=False, resize=False,
+                      drop=True), 4, 2),
+]
+
+
+@pytest.mark.parametrize("spec,espec,hbm,budget", _PINNED,
+                         ids=["kill-defer", "resize-storm", "kill+drop",
+                              "drop-only"])
+def test_chaos_fuzz_pinned(spec, espec, hbm, budget):
+    _chaos_differential(spec, espec, hbm, budget)
+
+
+# --------------------------------------------------------------------------- #
+# recovery-as-refactorization invariants                                      #
+# --------------------------------------------------------------------------- #
+
+def _populated_elastic(n_shards=2, tokens_per_req=160, n_req=6,
+                       **kw) -> ElasticShardedPagedKVCache:
+    kv = ElasticShardedPagedKVCache(hbm_pages=16, page_size=4,
+                                    prefetch_budget=2, n_shards=n_shards,
+                                    **kw)
+    rng = np.random.default_rng(17)
+    shared = list(rng.integers(0, 4000, size=24))
+    for r in range(n_req):
+        tail = list(rng.integers(0, 4000, size=tokens_per_req))
+        kv.register_request(r, shared[:int(rng.integers(0, 24))] + tail)
+    kv.touch_batch([(0, j) for j in range(8)])
+    return kv
+
+
+def test_recovery_rebuilds_exactly_the_dead_shards_rows():
+    """Kill each shard in turn: the rebuilt rows equal a from-scratch
+    successor_table on the dead shard's pages, survivors' rows are
+    untouched, and the full table equals the uninterrupted one."""
+    kv = _populated_elastic()
+    baseline = kv.successor_rows()
+    for s in range(kv.n_shards):
+        dead_pages = set(kv._owned_pages(s))
+        assert dead_pages, f"shard {s} owns no pages at this scale"
+        lost = kv.fail_shard(s)
+        assert lost > 0
+        assert s in kv.dead_shards
+        # the dead shard's rows are gone, survivors' remain
+        for d in dead_pages:
+            assert kv._succ_len[d] == 0
+        rep = kv.recover_shard(s)
+        assert rep.shard == s and rep.mode == "partial"
+        assert rep.refactorized == lost
+        assert set(rep.pages) <= dead_pages
+        _assert_recovery_invariant(kv)
+        assert kv.successor_rows() == baseline
+        assert kv.slices.verify(kv.registry)
+
+
+def test_recovery_after_registry_mutation_refactorizes_everything():
+    """A registry that mutated while the shard was dead invalidates ALL
+    surviving classification: recovery must re-factorize the whole
+    registry (mode="full") and still land on the from-scratch table."""
+    kv = _populated_elastic()
+    kv.fail_shard(0)
+    kv.register_request(99, list(range(5000, 5080)))     # mutate mid-death
+    kv.touch(99, 0)                                      # failover-on-demand
+    assert not kv.dead_shards
+    rep = kv.recovery_log[-1]
+    assert rep.mode == "full"
+    assert rep.refactorized == kv.registry.composites_array().size
+    assert kv.slices.verify(kv.registry)
+    vec = VectorizedPagedKVCache(hbm_pages=16, page_size=4,
+                                 prefetch_budget=2)
+    # independent from-scratch table over the same identity state
+    fresh = successor_table(kv.registry, kv.assigner,
+                            range(kv._next_page), discover="host")
+    assert kv.successor_rows() == {d: r for d, r in fresh.items() if r}
+    del vec
+
+
+def test_fail_shard_validates_and_is_idempotent():
+    kv = _populated_elastic()
+    with pytest.raises(ValueError):
+        kv.fail_shard(5)
+    with pytest.raises(ValueError):
+        kv.recover_shard(0)          # not dead
+    kv.fail_shard(1)
+    assert kv.fail_shard(1) == 0     # already dead: no-op
+    kv.recover_shard(1)
+
+
+# --------------------------------------------------------------------------- #
+# reshard-plan laws (migrate only the moved blocks)                           #
+# --------------------------------------------------------------------------- #
+
+def test_reshard_plan_moves_exactly_the_changed_owners():
+    kv = _populated_elastic(tokens_per_req=400)
+    kv.slices.sync(kv.registry)
+    before = np.array(kv.slices._owner, copy=True)
+    plan = kv.resize(4)
+    after = kv.slices._owner
+    changed = set(int(p) for p in np.nonzero(before != after)[0])
+    assert set(plan.moved) == changed
+    assert plan.n_old == 2 and plan.n_new == 4
+    assert plan.moved, "workload too small to move any block"
+    # strictly below the naive full re-shuffle
+    assert 0 < plan.migrated_bytes < plan.full_rebuild_bytes
+    assert plan.migrated_bytes == 8 * len(plan.moved)
+    # the maintained index matches a from-scratch classification at 4
+    assert kv.slices.verify(kv.registry)
+
+
+def test_resize_roundtrip_restores_ownership_and_keeps_rows():
+    kv = _populated_elastic(tokens_per_req=400)
+    kv.slices.sync(kv.registry)
+    rows = kv.successor_rows()
+    own2 = np.array(kv.slices._owner, copy=True)
+    up = kv.resize(4)
+    assert kv.n_shards == 4 and len(kv.shard_stats) == 4
+    assert kv.successor_rows() == rows         # NO global rebuild
+    down = kv.resize(2)
+    assert kv.n_shards == 2
+    assert np.array_equal(kv.slices._owner, own2)   # exact roundtrip
+    assert set(down.moved) == set(up.moved)         # same blocks move back
+    assert kv.successor_rows() == rows
+    # accounting folded, aggregate invariant intact
+    assert (kv.aggregate_shard_stats().parity_tuple()
+            == kv.stats.parity_tuple())
+
+
+def test_restripe_refuses_with_dead_shard():
+    kv = _populated_elastic()
+    kv.slices.sync(kv.registry)
+    kv.slices.forget_shard(0)
+    with pytest.raises(RuntimeError):
+        kv.slices.restripe(PrimeSpacePartition(4))
+
+
+def test_shard_slices_incremental_sync_modes():
+    kv = _populated_elastic()
+    sl = ShardSlices(kv.partition)
+    assert sl.sync(kv.registry) == "append"          # first build
+    assert sl.sync(kv.registry) == "noop"
+    n = sl._owner.size
+    kv.register_request(50, list(range(7000, 7040)))
+    assert sl.sync(kv.registry) == "append"          # tail-only classify
+    assert sl._owner.size > n
+    kv.registry.drop_prime(int(kv.registry.primes_array()[0]))
+    assert sl.sync(kv.registry) == "rebuild"         # in-place mutation
+    assert sl.verify(kv.registry)
+    # owner codes partition the index: every entry local or cross
+    assert set(np.unique(sl._owner)) <= set(range(kv.n_shards)) | {CROSS}
+    assert LOST not in sl._owner
+
+
+# --------------------------------------------------------------------------- #
+# fleet controller on an injectable clock                                     #
+# --------------------------------------------------------------------------- #
+
+def test_controller_heartbeat_expiry_recovers_and_resizes_down():
+    clk = ManualClock()
+    kv = _populated_elastic(n_shards=4)
+    ctl = ElasticController(kv, clock=clk, heartbeat_timeout_s=10.0)
+    clk.advance(5.0)
+    ctl.heartbeat()                                  # all 4 alive at t=5
+    assert ctl.tick() == []                          # nothing expired
+    clk.advance(11.0)                                # t=16
+    ctl.heartbeat(0)
+    ctl.heartbeat(1)                                 # 2, 3 stay silent
+    events = ctl.tick()
+    kinds = [e["kind"] for e in events]
+    assert kinds.count("recover") == 2 and kinds.count("resize") == 1
+    for e in events:
+        if e["kind"] == "recover":
+            assert e["node"] in (2, 3)
+            assert e["latency_s"] >= 0.0
+            assert e["report"] is not None
+    assert kv.n_shards == 2                          # planner: pow2(2) = 2
+    assert not kv.dead_shards
+    assert ctl.fleet.healthy_nodes == [0, 1]
+    # a replacement node joins -> planner resizes back up is impossible
+    # at 3 healthy (pow2(3) = 2); a 4th restores the full ladder
+    ctl.join(2)
+    assert ctl.tick() == []
+    ctl.join(3)
+    events = ctl.tick()
+    assert [e["kind"] for e in events] == ["resize"]
+    assert kv.n_shards == 4
+
+
+def test_controller_straggler_eviction_uses_injected_clock():
+    clk = ManualClock()
+    kv = _populated_elastic(n_shards=4)
+    ctl = ElasticController(kv, clock=clk, heartbeat_timeout_s=1e9,
+                            straggler_threshold=1.5, evict_after=3)
+    # nodes 0-2 step every 1s; node 3 every 4s — all measured through
+    # monitor.tick() off the injected clock, never the wall clock
+    for step in range(16):
+        clk.advance(1.0)
+        for n in (0, 1, 2):
+            ctl.monitor.tick(n)
+        if step % 4 == 3:
+            ctl.monitor.tick(3)
+        ctl.heartbeat()
+        events = ctl.tick()
+        if any(e["kind"] == "recover" for e in events):
+            break
+    else:
+        pytest.fail("straggler never evicted")
+    assert 3 not in ctl.fleet.healthy_nodes
+    assert not kv.dead_shards                        # recovered in-tick
+    assert kv.n_shards == 2                          # pow2(3 healthy) = 2
+
+
+def test_engine_elastic_hooks_and_parity():
+    """ServingEngine(kv="elastic"): resize + fail_shard mid-serve keep
+    generated tokens and page counters identical to the scalar engine;
+    the hooks reject non-elastic backends."""
+    from repro.serving.engine import ServingEngine
+
+    def workload(eng, elastic: bool):
+        rng = np.random.default_rng(3)
+        shared = list(rng.integers(0, 3000, size=48))
+        for r in range(20):
+            tail = list(rng.integers(0, 3000, size=int(rng.integers(8, 32))))
+            eng.submit(shared[:int(rng.integers(0, 48))] + tail,
+                       max_new_tokens=4)
+        done = []
+        step = 0
+        while eng.queue or any(s is not None for s in eng.slots):
+            if elastic and step == 2:
+                eng.resize(4)
+            if elastic and step == 4:
+                rep = eng.fail_shard(1)
+                assert rep is not None and rep.rows_rebuilt >= 0
+            if elastic and step == 6:
+                eng.fail_shard(0, recover=False)     # failover-on-demand
+                eng.resize(2)                        # recovers first
+            before = list(eng.slots)
+            eng.step()
+            done.extend(s for s in before
+                        if s is not None and s.state == "done")
+            step += 1
+        return done
+
+    engines = {kv: ServingEngine(None, None, max_batch=8, page_size=8,
+                                 hbm_pages=24, kv=kv, reread_window=2,
+                                 shards=2)
+               for kv in ("elastic", "scalar")}
+    done = {kv: workload(e, kv == "elastic") for kv, e in engines.items()}
+    gen = {kv: [(r.req_id, tuple(r.generated)) for r in sorted(
+        ds, key=lambda r: r.req_id)] for kv, ds in done.items()}
+    assert gen["elastic"] == gen["scalar"]
+    _assert_state_parity(engines["elastic"].pages, engines["scalar"].pages,
+                         "engine")
+    assert engines["elastic"].pages.recoveries >= 2
+    assert engines["elastic"].pages.reshard_log
+    with pytest.raises(ValueError):
+        engines["scalar"].resize(4)
+    with pytest.raises(ValueError):
+        engines["scalar"].fail_shard(0)
+
+
+# --------------------------------------------------------------------------- #
+# composition with tenancy: isolation through every elastic event             #
+# --------------------------------------------------------------------------- #
+
+def _tenanted_chaos(spec: TenantMixSpec, espec: ElasticEventSpec,
+                    hbm: int = 12) -> None:
+    from repro.tenancy.qos import (TenantedElasticShardedPagedKVCache,
+                                   TenantedPagedKVCache)
+
+    ops = build_tenant_requests(spec)
+    schedule = build_failure_schedule(espec, len(ops))
+    oracle = TenantedPagedKVCache(hbm_pages=hbm, page_size=4,
+                                  prefetch_budget=2, qos=spec.n_tenants)
+    ekv = TenantedElasticShardedPagedKVCache(hbm_pages=hbm, page_size=4,
+                                             prefetch_budget=2, n_shards=2,
+                                             qos=spec.n_tenants)
+
+    def elastic_event(kv, ev):
+        apply_elastic_event(kv, ev)
+        # the isolation checker after EVERY event — recovery and resize
+        # must never move a page across a tenant boundary
+        kv.namespace.assert_isolated(kv.registry)
+
+    def step_hook(kv):
+        kv.namespace.assert_isolated(kv.registry)
+
+    t0 = drive_tenants(oracle, ops, schedule=schedule)
+    t1 = drive_tenants(ekv, ops, step_hook=step_hook, schedule=schedule,
+                       on_event=elastic_event)
+    assert t0 == t1
+    _assert_state_parity(ekv, oracle, "tenanted-elastic")
+    for t in range(spec.n_tenants):
+        a, b = oracle.qos.tenant_stats[t], ekv.qos.tenant_stats[t]
+        for f in PARITY_COUNTERS:
+            assert getattr(a, f) == getattr(b, f), (t, f)
+    assert ekv.cross_tenant_prefetches() == 0
+    ekv._sync_tables()
+    assert not ekv.dead_shards
+
+
+def test_tenancy_composition_chaos_pinned():
+    _tenanted_chaos(
+        TenantMixSpec(seed=9, n_tenants=2, n_requests=10, n_touches=100,
+                      hot_tenant=True),
+        ElasticEventSpec(seed=21, n_events=5, defer=True))
+    _tenanted_chaos(
+        TenantMixSpec(seed=23, n_tenants=4, n_requests=12, n_touches=80,
+                      scanner_tenant=True, cross_prefix=True),
+        ElasticEventSpec(seed=8, n_events=4, resize=True, drop=True))

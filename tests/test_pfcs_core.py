@@ -157,6 +157,60 @@ def test_encode_relationship_chunks_overflow():
     assert prod == expect
 
 
+def test_composite_overflow_is_detected_never_silent():
+    """int64-overflow management (ROADMAP item 2): a deep relationship
+    chain whose product wraps 2**63 must be chunked or rejected — never
+    silently corrupted into a wrapped composite.
+
+    Three layers of defense, each asserted:
+      1. ``encode_relationship`` rejects any single prime that cannot
+         fit the chunk budget at all;
+      2. a deep chain registers as multiple exact chunks whose int64
+         kernel view stays positive (no wraparound) and factorizes back
+         to exactly the member primes (Theorem 1 survives the chunking);
+      3. a registry misconfigured so chunks could exceed the signed
+         int64 kernel word is rejected at construction.
+    """
+    # (1) an un-representable prime raises, both standalone and in a chain
+    huge = (1 << 62) + 57                   # any value >= 2**62 works here
+    with pytest.raises(ValueError):
+        encode_relationship([huge], max_bits=62)
+    with pytest.raises(ValueError):
+        encode_relationship([11, huge], max_bits=62)
+
+    # (2) deep chain: 40 primes near 2**20 -> product ~2**800, far past
+    # int64; registration must stay exact via chunking
+    reg = CompositeRegistry()
+    primes = [p for p in range(1_048_583, 1_050_000) if is_prime(p)][:40]
+    assert len(primes) == 40
+    rel = reg.register(primes)
+    assert len(rel.composites) > 1          # chunked, not wrapped
+    arr = reg.composites_array()
+    assert arr.dtype == np.int64
+    assert (arr > 0).all()                  # a wrap would go negative
+    prod = 1
+    for c in rel.composites:
+        assert 1 < c < 2**62
+        prod *= c
+    expect = 1
+    for p in primes:
+        expect *= p
+    assert prod == expect                   # bit-exact over the chunks
+    # factorization recovers the exact member set from the chunks
+    members = set()
+    for c in rel.composites:
+        members |= set(reg.decode(int(c)))
+    assert members == set(primes)
+    # divisibility scan still finds the chain through any member
+    assert reg.related_primes(primes[0]) == set(primes) - {primes[0]}
+
+    # (3) a chunk budget that can exceed int64 is a construction error
+    for bad in (64, 70, 1, 0, -5):
+        with pytest.raises(ValueError):
+            CompositeRegistry(max_bits=bad)
+    assert CompositeRegistry(max_bits=63).max_bits == 63   # boundary ok
+
+
 def test_drop_prime_purges_relationships():
     reg = CompositeRegistry()
     reg.register({11, 13})

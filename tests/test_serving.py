@@ -14,7 +14,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from strategies import drive_kv
+from strategies import apply_kv_ops, drive_kv
 from repro.serving.expert_cache import ExpertCache
 from repro.serving.kv_cache import PARITY_COUNTERS, PagedKVCache
 from repro.serving.kv_cache_sharded import ShardedPagedKVCache
@@ -138,16 +138,17 @@ def test_out_of_band_registry_drop_forces_rebuild():
     """An out-of-band registry mutation (Algorithm-1 prime recycling via
     ``assigner.release`` drops relationships) must not be masked by the
     incremental table maintenance: the next touch rebuilds in bulk and
-    parity with the oracle holds."""
-    from repro.core.primes import CacheLevel
-
+    parity with the oracle holds.  The drop rides the chaos-event
+    machinery (``strategies.apply_kv_ops`` schedule) so the same event
+    stream also drives the elastic fuzz in tests/test_elastic.py."""
+    ops = [("register", 0, tuple(range(16))),          # pages 0..3
+           ("register", 1, tuple(list(range(8)) + [9] * 8)),
+           ("touch", 0, 0), ("touch", 0, 2)]
+    schedule = {1: [("drop", 1)]}                      # drop page 1's prime
     a = PagedKVCache(hbm_pages=8, page_size=4, prefetch_budget=2)
     b = VectorizedPagedKVCache(hbm_pages=8, page_size=4, prefetch_budget=2)
-    for kv in (a, b):
-        kv.register_request(0, list(range(16)))        # pages 0..3
-        kv.assigner.release(1, CacheLevel.L2)          # drop page 1's prime
-        kv.register_request(1, list(range(8)) + [9] * 8)
-        tiers = [kv.touch(0, 0), kv.touch(0, 2)]
+    tiers = {kv: apply_kv_ops(kv, ops, schedule=schedule) for kv in (a, b)}
+    assert tiers[a] == tiers[b]
     assert a.stats.parity_tuple() == b.stats.parity_tuple()
     assert list(a.hbm.items()) == list(b.hbm.items())
 

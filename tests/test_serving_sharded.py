@@ -14,8 +14,9 @@ a single drawn spec differentially exercises all four caches at once.
 import numpy as np
 import pytest
 
-from strategies import (KVWorkloadSpec, apply_kv_ops, build_kv_ops,
-                        given, kv_workload_specs, settings, st)
+from strategies import (ElasticEventSpec, KVWorkloadSpec, apply_kv_ops,
+                        build_failure_schedule, build_kv_ops, given,
+                        kv_workload_specs, settings, st)
 from repro.core.engine.shard import (PrimeSpacePartition, shard_mesh,
                                      sharded_successor_table)
 from repro.serving.kv_cache import PARITY_COUNTERS, PagedKVCache
@@ -23,9 +24,17 @@ from repro.serving.kv_cache_sharded import ShardedPagedKVCache
 from repro.serving.kv_cache_vec import VectorizedPagedKVCache
 
 
-def _differential(spec: KVWorkloadSpec, hbm: int, budget: int) -> None:
-    """Replay one spec against oracle / vec / sharded(1) / sharded(2)."""
+def _differential(spec: KVWorkloadSpec, hbm: int, budget: int,
+                  espec: ElasticEventSpec = None) -> None:
+    """Replay one spec against oracle / vec / sharded(1) / sharded(2).
+
+    ``espec``, when given, injects workload-mutating chaos events (prime
+    drops) through the same ``build_failure_schedule`` machinery the
+    elastic fuzz uses (tests/test_elastic.py) — identical schedules
+    replay against every implementation."""
     ops = build_kv_ops(spec)
+    schedule = (build_failure_schedule(espec, len(ops))
+                if espec is not None else None)
     caches = {
         "scalar": PagedKVCache(hbm_pages=hbm, page_size=4,
                                prefetch_budget=budget),
@@ -36,7 +45,8 @@ def _differential(spec: KVWorkloadSpec, hbm: int, budget: int) -> None:
         "shard2": ShardedPagedKVCache(hbm_pages=hbm, page_size=4,
                                       prefetch_budget=budget, n_shards=2),
     }
-    tiers = {name: apply_kv_ops(kv, ops) for name, kv in caches.items()}
+    tiers = {name: apply_kv_ops(kv, ops, schedule=schedule)
+             for name, kv in caches.items()}
     oracle = caches["scalar"]
     for name, kv in caches.items():
         if name == "scalar":
@@ -72,22 +82,25 @@ def test_differential_fuzz_property(spec, hbm, budget):
 # when hypothesis is not installed (tier-1 must not lose this coverage)
 _PINNED = [
     # 1-slot HBM: every insert evicts
-    (KVWorkloadSpec(seed=3, n_requests=8, n_touches=80), 1, 3),
-    # registry drop -> bulk table rebuild path, small HBM
-    (KVWorkloadSpec(seed=5, n_requests=10, n_touches=100,
-                    drop_primes=True), 4, 2),
+    (KVWorkloadSpec(seed=3, n_requests=8, n_touches=80), 1, 3, None),
+    # registry drop -> bulk table rebuild path, small HBM; the drops are
+    # schedule-driven chaos events (strategies.build_failure_schedule)
+    (KVWorkloadSpec(seed=5, n_requests=10, n_touches=100), 4, 2,
+     ElasticEventSpec(seed=5, n_events=4, kill=False, resize=False,
+                      drop=True)),
     # eviction-adversarial sweeps + releases, prefetch off
-    (KVWorkloadSpec(seed=7, n_requests=12, n_touches=60, sweeps=2), 8, 0),
+    (KVWorkloadSpec(seed=7, n_requests=12, n_touches=60, sweeps=2),
+     8, 0, None),
     # deep shared prefixes, dense touches
     (KVWorkloadSpec(seed=11, n_requests=9, n_touches=120, key_space=60,
-                    shared_pool=32, max_tail=6), 16, 4),
+                    shared_pool=32, max_tail=6), 16, 4, None),
 ]
 
 
-@pytest.mark.parametrize("spec,hbm,budget", _PINNED,
+@pytest.mark.parametrize("spec,hbm,budget,espec", _PINNED,
                          ids=["hbm1", "registry-drop", "sweeps", "prefix"])
-def test_differential_fuzz_pinned(spec, hbm, budget):
-    _differential(spec, hbm, budget)
+def test_differential_fuzz_pinned(spec, hbm, budget, espec):
+    _differential(spec, hbm, budget, espec=espec)
 
 
 # --------------------------------------------------------------------------- #

@@ -16,7 +16,7 @@ from repro.training.checkpoint import CheckpointManager
 from repro.training.compression import (compress_tree, decompress_tree,
                                         init_residuals, roundtrip_error)
 from repro.training.elastic import (ElasticPlanner, FleetState,
-                                    StragglerMonitor)
+                                    ManualClock, StragglerMonitor)
 from repro.training.optimizer import (adafactor, adamw, clip_by_global_norm,
                                       cosine_schedule, sgdm)
 
@@ -192,6 +192,77 @@ def test_straggler_eviction():
         slow, ev = mon.check()
         evicted.extend(ev)
     assert 2 in evicted
+
+
+def test_fleet_injected_clock_heartbeat_expiry_edges():
+    """No wall-clock reads: FleetState on a ManualClock, exercising the
+    exact boundary — a node silent for exactly timeout_s is still
+    healthy; one instant past, it expires."""
+    clk = ManualClock(t=100.0)
+    fs = FleetState(n_nodes=3, heartbeat_timeout_s=10.0, clock=clk)
+    for n in range(3):
+        fs.heartbeat(n)                       # timestamps from the clock
+    clk.advance(10.0)
+    fs.heartbeat(0)
+    assert fs.sweep() == []                   # now - t == timeout: alive
+    clk.advance(0.5)
+    assert set(fs.sweep()) == {1, 2}          # strictly past: expired
+    assert fs.healthy_nodes == [0]
+    # heartbeats from failed nodes are ignored until they rejoin
+    fs.heartbeat(1)
+    assert fs.healthy_nodes == [0]
+    fs.join(1)
+    assert fs.healthy_nodes == [0, 1]
+    clk.advance(10.5)
+    fs.heartbeat(0)                           # 0 stays chatty
+    assert fs.sweep() == [1]                  # stale join expires again too
+    # join can also grow the fleet past its original size
+    fs.join(5)
+    assert fs.n_nodes == 6 and 5 in fs.healthy_nodes
+
+
+def test_straggler_tick_measures_injected_clock_and_evict_after_edge():
+    """tick() derives step times purely from the injected clock, and a
+    node is evicted on exactly the ``evict_after``-th consecutive slow
+    check — not one earlier, with the strike count reset by a fast
+    window."""
+    clk = ManualClock()
+    mon = StragglerMonitor(threshold=1.5, window=8, evict_after=3,
+                           clock=clk)
+    assert mon.tick(0) is None                # first tick: no interval yet
+    clk.advance(2.0)
+    assert mon.tick(0) == 2.0
+    # nodes 0-2 step 1s, node 3 steps 4s; strikes accrue once 3 has data
+    mon2 = StragglerMonitor(threshold=1.5, window=8, evict_after=3,
+                            clock=clk)
+    checks_while_slow = 0
+    for step in range(12):
+        clk.advance(1.0)
+        for n in (0, 1, 2):
+            mon2.tick(n)
+        if step % 4 == 3:
+            mon2.tick(3)
+        slow, evict = mon2.check()
+        if 3 in slow:
+            checks_while_slow += 1
+            if checks_while_slow < 3:
+                assert 3 not in evict         # edge: not before the 3rd
+            else:
+                assert 3 in evict
+                break
+    else:
+        pytest.fail("straggler never evicted")
+    # a fast window resets the strike counter
+    mon3 = StragglerMonitor(threshold=1.5, window=8, evict_after=2)
+    for n in range(3):
+        mon3.record(n, 1.0)
+    mon3.record(3, 4.0)
+    assert mon3.check() == ([3], [])          # strike 1
+    mon3._times[3].clear()
+    mon3.record(3, 1.0)                       # back to fleet speed
+    assert mon3.check() == ([], [])           # reset
+    mon3.record(3, 4.0)
+    assert mon3.check() == ([3], [])          # strike 1 again, not 2
 
 
 # --------------------------------------------------------------------------- #
