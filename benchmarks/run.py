@@ -21,9 +21,10 @@ def main(argv=None) -> None:
                     help="tiny-scale CI subset: Table 1 at reduced scale "
                          "plus the serving load case, the elastic "
                          "resize/recovery chaos case, the MoE "
-                         "expert-serving case, and the multi-tenant QoS "
-                         "case (exercises every serving hot path on "
-                         "every PR)")
+                         "expert-serving case, the multi-tenant QoS "
+                         "case, and the continuous-batching Poisson "
+                         "load case (exercises every serving hot path "
+                         "on every PR)")
     ap.add_argument("--skip-roofline", action="store_true",
                     help="skip the dry-run-artifact roofline table")
     ap.add_argument("--scale", type=float, default=1.0,
@@ -49,6 +50,7 @@ def main(argv=None) -> None:
         cases.case_elastic(smoke=True)
         cases.case_moe(smoke=True)
         cases.case_tenancy(smoke=True)
+        cases.case_batching(smoke=True)
         print(f"\ntotal benchmark wall time: {time.time() - t0:.1f}s")
         return
 
@@ -62,6 +64,7 @@ def main(argv=None) -> None:
     cases.case_elastic()
     cases.case_moe()
     cases.case_tenancy()
+    cases.case_batching()
     kernel_bench.run()
 
     if not args.skip_roofline:

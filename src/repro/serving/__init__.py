@@ -27,6 +27,12 @@ Public entry points (documented with runnable examples in docs/api.md):
   * :class:`ElasticShardedPagedKVCache` — live resharding + shard-loss
     recovery by refactorization (DESIGN.md §9; ``ServingEngine`` takes
     it with ``kv="elastic"`` and exposes ``resize``/``fail_shard``)
+  * :class:`SlotMachine`            — continuous-batching slot machine:
+    prefill/decode disaggregation, open-loop async admission, chunked
+    prefill, preempt/resume with factorization-recovered prefetch
+    (DESIGN.md §10); :class:`SlotOracle` is its per-slot Python-loop
+    twin, differentially fuzzed bit-exact
+    (``tests/test_serving_batching.py``)
 
 The vectorized and sharded caches must reproduce the oracle's
 ``PageStats`` / ``ExpertCacheStats`` counters bit-for-bit
@@ -44,6 +50,8 @@ from .expert_cache_vec import VectorizedExpertCache
 from .kv_cache import PARITY_COUNTERS, PagedKVCache, PageStats
 from .kv_cache_sharded import ShardedPagedKVCache
 from .kv_cache_vec import VectorizedPagedKVCache
+from .slots import (SlotMachine, SlotOracle, SlotRequest,
+                    poisson_arrival_ticks)
 
 __all__ = [
     "Request", "ServingEngine", "ExpertCache", "ExpertCacheStats",
@@ -51,4 +59,5 @@ __all__ = [
     "PagedKVCache", "PageStats", "PARITY_COUNTERS",
     "ShardedPagedKVCache", "VectorizedPagedKVCache",
     "ElasticShardedPagedKVCache", "ElasticController", "RecoveryReport",
+    "SlotMachine", "SlotOracle", "SlotRequest", "poisson_arrival_ticks",
 ]

@@ -71,10 +71,106 @@ from .kv_cache import PagedKVCache
 from .kv_cache_sharded import ShardedPagedKVCache
 from .kv_cache_vec import VectorizedPagedKVCache
 
-__all__ = ["Request", "ServingEngine"]
+__all__ = ["Request", "ServingEngine", "make_kv_backend",
+           "make_expert_backend", "synthetic_router_groups"]
 
 #: stub-decode vocabulary (model=None load-generator mode)
 _STUB_VOCAB = 32_000
+
+
+def make_kv_backend(kv: str, *, hbm_pages: int, page_size: int,
+                    prefetch_budget: int, shards: int = 2, mesh="auto",
+                    tenants=None) -> PagedKVCache:
+    """Construct a paged-KV cache backend by name — the single backend
+    registry every engine front-end shares (``ServingEngine`` and the
+    continuous-batching :class:`~repro.serving.slots.SlotMachine`).
+
+    ``kv`` is one of ``"vec" | "scalar" | "sharded" | "elastic"``;
+    ``tenants`` (an int or a :class:`~repro.tenancy.TenantQoSConfig`)
+    selects the tenant-namespaced variant of the same backend
+    (DESIGN.md §8)."""
+    if tenants is not None:
+        from repro.tenancy.qos import (
+            TenantedElasticShardedPagedKVCache, TenantedPagedKVCache,
+            TenantedShardedPagedKVCache, TenantedVectorizedPagedKVCache)
+        if kv == "vec":
+            return TenantedVectorizedPagedKVCache(
+                hbm_pages=hbm_pages, page_size=page_size,
+                prefetch_budget=prefetch_budget, qos=tenants)
+        if kv == "scalar":
+            return TenantedPagedKVCache(
+                hbm_pages=hbm_pages, page_size=page_size,
+                prefetch_budget=prefetch_budget, qos=tenants)
+        if kv == "sharded":
+            return TenantedShardedPagedKVCache(
+                hbm_pages=hbm_pages, page_size=page_size,
+                prefetch_budget=prefetch_budget, n_shards=shards,
+                mesh=mesh, qos=tenants)
+        if kv == "elastic":
+            return TenantedElasticShardedPagedKVCache(
+                hbm_pages=hbm_pages, page_size=page_size,
+                prefetch_budget=prefetch_budget, n_shards=shards,
+                mesh=mesh, qos=tenants)
+    elif kv == "vec":
+        return VectorizedPagedKVCache(
+            hbm_pages=hbm_pages, page_size=page_size,
+            prefetch_budget=prefetch_budget)
+    elif kv == "scalar":
+        return PagedKVCache(hbm_pages=hbm_pages, page_size=page_size,
+                            prefetch_budget=prefetch_budget)
+    elif kv == "sharded":
+        return ShardedPagedKVCache(
+            hbm_pages=hbm_pages, page_size=page_size,
+            prefetch_budget=prefetch_budget, n_shards=shards, mesh=mesh)
+    elif kv == "elastic":
+        return ElasticShardedPagedKVCache(
+            hbm_pages=hbm_pages, page_size=page_size,
+            prefetch_budget=prefetch_budget, n_shards=shards, mesh=mesh)
+    raise ValueError(f"kv must be 'vec', 'scalar', 'sharded' or "
+                     f"'elastic', got {kv!r}")
+
+
+def make_expert_backend(moe: Optional[str], *, moe_experts: int,
+                        moe_slots: int, moe_prefetch_budget: int,
+                        tenants=None) -> Optional[ExpertCache]:
+    """Construct an MoE expert-cache backend by name (``None`` disables
+    the tier).  Shared by every engine front-end; with ``tenants`` the
+    tenant-partitioned variant splits its own slot budget evenly."""
+    if moe is None:
+        return None
+    if tenants is not None and moe in ("vec", "scalar"):
+        from repro.tenancy.qos import (TenantedExpertCache,
+                                       TenantedVectorizedExpertCache)
+        cls = (TenantedVectorizedExpertCache if moe == "vec"
+               else TenantedExpertCache)
+        # a TenantQoSConfig sizes the KV cache's HBM pages; the
+        # expert tier keeps the tenant count and splits its own
+        # slot budget evenly
+        moe_qos = tenants if isinstance(tenants, int) else tenants.n_tenants
+        return cls(moe_experts, hbm_slots=moe_slots,
+                   prefetch_budget=moe_prefetch_budget, qos=moe_qos)
+    if moe == "vec":
+        return VectorizedExpertCache(moe_experts, hbm_slots=moe_slots,
+                                     prefetch_budget=moe_prefetch_budget)
+    if moe == "scalar":
+        return ExpertCache(moe_experts, hbm_slots=moe_slots,
+                           prefetch_budget=moe_prefetch_budget)
+    raise ValueError(f"moe must be None, 'vec' or 'scalar', got {moe!r}")
+
+
+def synthetic_router_groups(moe_experts: int, moe_topk: int,
+                            moe_groups: int, moe_seed: int = 0):
+    """Deterministic synthetic-router group pool (model=None MoE mode):
+    a fixed set of co-activation groups with zipf-skewed expert
+    popularity.  Every engine front-end draws from the same pool, so a
+    workload replayed across engines routes identically."""
+    rng = np.random.default_rng(moe_seed)
+    pop = 1.0 / np.arange(1, moe_experts + 1, dtype=np.float64)
+    pop /= pop.sum()
+    return [tuple(int(e) for e in rng.choice(
+        moe_experts, size=min(moe_topk, moe_experts),
+        replace=False, p=pop))
+        for _ in range(max(1, moe_groups))]
 
 
 @dataclass
@@ -109,82 +205,19 @@ class ServingEngine:
         # a tenant id and the cache enforces per-tenant quotas with
         # per-tenant PageStats / prefetch logs
         self.tenants = tenants
-        if tenants is not None:
-            from repro.tenancy.qos import (
-                TenantedElasticShardedPagedKVCache, TenantedPagedKVCache,
-                TenantedShardedPagedKVCache, TenantedVectorizedPagedKVCache)
-            if kv == "vec":
-                self.pages: PagedKVCache = TenantedVectorizedPagedKVCache(
-                    hbm_pages=hbm_pages, page_size=page_size,
-                    prefetch_budget=prefetch_budget, qos=tenants)
-            elif kv == "scalar":
-                self.pages = TenantedPagedKVCache(
-                    hbm_pages=hbm_pages, page_size=page_size,
-                    prefetch_budget=prefetch_budget, qos=tenants)
-            elif kv == "sharded":
-                self.pages = TenantedShardedPagedKVCache(
-                    hbm_pages=hbm_pages, page_size=page_size,
-                    prefetch_budget=prefetch_budget, n_shards=shards,
-                    mesh=mesh, qos=tenants)
-            elif kv == "elastic":
-                self.pages = TenantedElasticShardedPagedKVCache(
-                    hbm_pages=hbm_pages, page_size=page_size,
-                    prefetch_budget=prefetch_budget, n_shards=shards,
-                    mesh=mesh, qos=tenants)
-            else:
-                raise ValueError(f"kv must be 'vec', 'scalar', 'sharded' "
-                                 f"or 'elastic', got {kv!r}")
-        elif kv == "vec":
-            self.pages = VectorizedPagedKVCache(
-                hbm_pages=hbm_pages, page_size=page_size,
-                prefetch_budget=prefetch_budget)
-        elif kv == "scalar":
-            self.pages = PagedKVCache(hbm_pages=hbm_pages,
-                                      page_size=page_size,
-                                      prefetch_budget=prefetch_budget)
-        elif kv == "sharded":
-            self.pages = ShardedPagedKVCache(
-                hbm_pages=hbm_pages, page_size=page_size,
-                prefetch_budget=prefetch_budget, n_shards=shards, mesh=mesh)
-        elif kv == "elastic":
-            self.pages = ElasticShardedPagedKVCache(
-                hbm_pages=hbm_pages, page_size=page_size,
-                prefetch_budget=prefetch_budget, n_shards=shards, mesh=mesh)
-        else:
-            raise ValueError(f"kv must be 'vec', 'scalar', 'sharded' or "
-                             f"'elastic', got {kv!r}")
+        self.pages: PagedKVCache = make_kv_backend(
+            kv, hbm_pages=hbm_pages, page_size=page_size,
+            prefetch_budget=prefetch_budget, shards=shards, mesh=mesh,
+            tenants=tenants)
         # MoE expert-weight tier (DESIGN.md §7); router feed is the real
         # model router when the model is a MoE arch, a deterministic
         # synthetic schedule in load-generator mode
         model_moe = getattr(getattr(model, "cfg", None), "moe", None)
         if model_moe is not None:
             moe_experts, moe_topk = model_moe.n_experts, model_moe.top_k
-        if moe is None:
-            self.experts: Optional[ExpertCache] = None
-        elif tenants is not None and moe in ("vec", "scalar"):
-            from repro.tenancy.qos import (TenantedExpertCache,
-                                           TenantedVectorizedExpertCache)
-            cls = (TenantedVectorizedExpertCache if moe == "vec"
-                   else TenantedExpertCache)
-            # a TenantQoSConfig sizes the KV cache's HBM pages; the
-            # expert tier keeps the tenant count and splits its own
-            # slot budget evenly
-            moe_qos = tenants if isinstance(tenants, int) \
-                else tenants.n_tenants
-            self.experts = cls(moe_experts, hbm_slots=moe_slots,
-                               prefetch_budget=moe_prefetch_budget,
-                               qos=moe_qos)
-        elif moe == "vec":
-            self.experts = VectorizedExpertCache(
-                moe_experts, hbm_slots=moe_slots,
-                prefetch_budget=moe_prefetch_budget)
-        elif moe == "scalar":
-            self.experts = ExpertCache(
-                moe_experts, hbm_slots=moe_slots,
-                prefetch_budget=moe_prefetch_budget)
-        else:
-            raise ValueError(f"moe must be None, 'vec' or 'scalar', "
-                             f"got {moe!r}")
+        self.experts: Optional[ExpertCache] = make_expert_backend(
+            moe, moe_experts=moe_experts, moe_slots=moe_slots,
+            moe_prefetch_budget=moe_prefetch_budget, tenants=tenants)
         if (self.experts is not None and model is not None
                 and getattr(model, "decode_step_router", None) is None):
             raise ValueError(
@@ -192,17 +225,10 @@ class ServingEngine:
                 "decode_step_router) or model=None for the synthetic-"
                 "router load-generator mode")
         if self.experts is not None and model is None:
-            # synthetic router: a fixed pool of co-activation groups with
-            # zipf-skewed expert popularity, drawn deterministically per
-            # (request, position) — identical across cache backends
-            rng = np.random.default_rng(moe_seed)
-            pop = 1.0 / np.arange(1, moe_experts + 1, dtype=np.float64)
-            pop /= pop.sum()
-            self._moe_groups = [
-                tuple(int(e) for e in rng.choice(
-                    moe_experts, size=min(moe_topk, moe_experts),
-                    replace=False, p=pop))
-                for _ in range(max(1, moe_groups))]
+            # synthetic router: drawn deterministically per (request,
+            # position) — identical across cache backends AND engines
+            self._moe_groups = synthetic_router_groups(
+                moe_experts, moe_topk, moe_groups, moe_seed)
         else:
             self._moe_groups = None
         self.queue: List[Request] = []

@@ -50,6 +50,8 @@ __all__ = [
     "expert_workload_specs",
     "TenantMixSpec", "build_tenant_requests", "drive_tenants",
     "tenant_mix_specs",
+    "ArrivalSpec", "build_poisson_arrivals", "drive_slots",
+    "arrival_specs",
     "HAVE_HYPOTHESIS", "given", "settings", "st",
 ]
 
@@ -457,6 +459,112 @@ def tenant_mix_specs():
         cross_prefix=st.booleans(),
         release=st.booleans(),
         drop_primes=st.booleans(),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# open-loop arrival traces (continuous-batching tier)                         #
+# --------------------------------------------------------------------------- #
+
+@dataclass(frozen=True)
+class ArrivalSpec:
+    """Compact description of an open-loop Poisson arrival trace;
+    expanded by :func:`build_poisson_arrivals` into concrete
+    (arrival-tick, prompt, max_new, tenant) tuples — the
+    continuous-batching differential fuzz's input
+    (tests/test_serving_batching.py)."""
+
+    seed: int = 0
+    n_requests: int = 24
+    rate: float = 1.5              # mean requests per engine tick
+    burst_frac: float = 0.0        # fraction front-loaded at tick 0 ...
+    silence_ticks: int = 0         # ... followed by this much dead air
+    min_prompt: int = 1            # prompt-length bounds: (1, 6) is the
+    max_prompt: int = 24           # all-short mix, (40, 90) all-long
+    max_new: int = 10              # decode-demand upper bound (ragged)
+    shared_pool: int = 16          # tokens available for shared prefixes
+    key_space: int = 200
+    n_tenants: int = 1
+
+
+def build_poisson_arrivals(spec: ArrivalSpec) -> List[Tuple]:
+    """Expand a spec into ``(arrival, prompt, max_new, tenant)`` tuples
+    in submission order.  Inter-arrival gaps are exponential at
+    ``spec.rate`` (open-loop: the trace does not react to the engine);
+    ``burst_frac``/``silence_ticks`` shape the burst-then-silence
+    adversarial mix.  Prompts draw a shared prefix + random tail like
+    :func:`build_kv_ops`, so chain discovery and gcd sharing stay
+    exercised under load.  All values are absolute — the same list
+    replays bit-identically into any slot engine."""
+    from repro.serving.slots import poisson_arrival_ticks
+
+    rng = np.random.default_rng(spec.seed)
+    ticks = poisson_arrival_ticks(
+        spec.n_requests, rate=spec.rate, seed=spec.seed,
+        burst_frac=spec.burst_frac, silence_ticks=spec.silence_ticks)
+    shared = list(rng.integers(0, spec.key_space, size=spec.shared_pool))
+    out: List[Tuple] = []
+    lo = max(1, spec.min_prompt)
+    hi = max(lo + 1, spec.max_prompt)
+    for i, t in enumerate(ticks):
+        n = int(rng.integers(lo, hi))
+        pfx = int(rng.integers(0, min(spec.shared_pool, n) + 1))
+        tail = [int(x) for x in rng.integers(0, spec.key_space,
+                                             size=n - pfx)]
+        out.append((int(t), tuple(shared[:pfx] + tail),
+                    int(rng.integers(1, max(2, spec.max_new))),
+                    int(rng.integers(spec.n_tenants))
+                    if spec.n_tenants > 1 else 0))
+    return out
+
+
+def drive_slots(engine, arrivals: Sequence[Tuple], schedule=None,
+                on_event=None, step_hook=None,
+                max_ticks: int = 100_000) -> List[str]:
+    """Submit an arrival trace into a slot engine and tick it to idle;
+    returns the engine's full tier log (the differential-comparison
+    payload).  ``schedule`` (a :func:`build_failure_schedule` dict:
+    tick index -> event list) injects chaos events against the
+    engine's page cache BEFORE the step at that tick, exactly as
+    :func:`apply_kv_ops` does per op — the elastic x batching
+    composition fuzz.  ``step_hook(engine)``, when given, runs after
+    every tick (the tenancy fuzz proves isolation at each one)."""
+    for arrival, prompt, max_new, tenant in arrivals:
+        engine.submit(list(prompt), max_new_tokens=max_new,
+                      tenant=tenant, arrival=arrival)
+    fire = on_event if on_event is not None else apply_elastic_event
+    for _ in range(max_ticks):
+        if engine.idle():
+            return engine.tier_log
+        if schedule:
+            for ev in schedule.get(engine.now, ()):
+                fire(engine.pages, ev)
+        engine.step()
+        if step_hook is not None:
+            step_hook(engine)
+    raise RuntimeError(f"slot engine failed to drain within "
+                       f"{max_ticks} ticks")
+
+
+def arrival_specs():
+    """Strategy over open-loop arrival specs, biased toward the edges
+    the batching parity suite cares about: all-short vs all-long prompt
+    mixes, burst-then-silence traffic, ragged decode demands, multi-
+    tenant tags (degenerate 1-slot engines and preemption pressure come
+    from the caller's engine config)."""
+    return st.builds(
+        ArrivalSpec,
+        seed=st.integers(min_value=0, max_value=2**16),
+        n_requests=st.integers(min_value=2, max_value=28),
+        rate=st.sampled_from([0.3, 1.5, 6.0]),
+        burst_frac=st.sampled_from([0.0, 0.5, 1.0]),
+        silence_ticks=st.sampled_from([0, 12]),
+        min_prompt=st.sampled_from([1, 6, 40]),
+        max_prompt=st.sampled_from([6, 24, 90]),
+        max_new=st.sampled_from([2, 10, 24]),
+        shared_pool=st.sampled_from([4, 16]),
+        key_space=st.sampled_from([60, 200]),
+        n_tenants=st.sampled_from([1, 2]),
     )
 
 

@@ -1,0 +1,142 @@
+"""The BENCH trajectory regression gate (tools/check_bench_regression.py).
+
+The checked-in ``BENCH_*.json`` files are the performance trajectory;
+the gate is what makes them enforceable in CI (snapshot baselines ->
+re-run ``--smoke`` -> compare).  Covered paths: pass (exact and
+within-tolerance), numeric regression, missing metric, missing case
+file, new case / new metric (note, not failure), time-derived metric
+exemption, and the flattening of nested payloads."""
+
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+TOOLS = Path(__file__).resolve().parents[1] / "tools"
+sys.path.insert(0, str(TOOLS))
+
+from check_bench_regression import (flatten, is_time_derived, main,
+                                    run_gate)
+
+
+def _write(d: Path, name: str, payload: dict) -> None:
+    (d / name).write_text(json.dumps(payload))
+
+
+@pytest.fixture()
+def dirs(tmp_path):
+    base = tmp_path / "base"
+    fresh = tmp_path / "fresh"
+    base.mkdir()
+    fresh.mkdir()
+    return base, fresh
+
+
+PAYLOAD = {
+    "slot_vec": {"goodput_tok_per_tick": 28.5, "ticks": 250,
+                 "ttft_ticks": {"50": 120.0, "99": 241.0},
+                 "wall_s": 1.93},
+    "lockstep": {"goodput_tok_per_tick": 18.4, "ticks": 388},
+}
+
+
+def test_gate_passes_on_identical_files(dirs, capsys):
+    base, fresh = dirs
+    _write(base, "BENCH_case_batching.json", PAYLOAD)
+    _write(fresh, "BENCH_case_batching.json", PAYLOAD)
+    assert run_gate(base, fresh) == 0
+    assert "OK" in capsys.readouterr().out
+
+
+def test_gate_ignores_time_derived_drift(dirs):
+    base, fresh = dirs
+    _write(base, "BENCH_case_batching.json", PAYLOAD)
+    noisy = json.loads(json.dumps(PAYLOAD))
+    noisy["slot_vec"]["wall_s"] = 97.0          # machine-load noise
+    _write(fresh, "BENCH_case_batching.json", noisy)
+    assert run_gate(base, fresh) == 0
+
+
+def test_gate_fails_on_numeric_regression(dirs, capsys):
+    base, fresh = dirs
+    _write(base, "BENCH_case_batching.json", PAYLOAD)
+    worse = json.loads(json.dumps(PAYLOAD))
+    worse["slot_vec"]["goodput_tok_per_tick"] = 20.0
+    _write(fresh, "BENCH_case_batching.json", worse)
+    assert run_gate(base, fresh) == 1
+    out = capsys.readouterr().out
+    assert "goodput_tok_per_tick" in out and "FAIL" in out
+    # ... but passes inside an explicit tolerance band
+    assert run_gate(base, fresh, rel_tol=0.5) == 0
+
+
+def test_gate_fails_on_missing_metric_and_missing_case(dirs, capsys):
+    base, fresh = dirs
+    _write(base, "BENCH_case_batching.json", PAYLOAD)
+    _write(base, "BENCH_case_serving.json", {"tok": 1})
+    dropped = json.loads(json.dumps(PAYLOAD))
+    del dropped["lockstep"]["ticks"]
+    _write(fresh, "BENCH_case_batching.json", dropped)
+    # no fresh BENCH_case_serving.json at all
+    assert run_gate(base, fresh) == 1
+    out = capsys.readouterr().out
+    assert "missing from fresh" in out
+    assert "produced no file" in out
+
+
+def test_gate_notes_new_case_and_new_metric_without_failing(dirs, capsys):
+    base, fresh = dirs
+    _write(base, "BENCH_case_batching.json", PAYLOAD)
+    extra = json.loads(json.dumps(PAYLOAD))
+    extra["slot_vec"]["resumes"] = 3            # new metric
+    _write(fresh, "BENCH_case_batching.json", extra)
+    _write(fresh, "BENCH_case_new.json", {"x": 1})   # new case
+    assert run_gate(base, fresh) == 0
+    out = capsys.readouterr().out
+    assert "new metric 'slot_vec.resumes'" in out
+    assert "new case" in out
+
+
+def test_gate_fails_on_type_change_and_non_numeric_drift(dirs):
+    base, fresh = dirs
+    _write(base, "BENCH_x.json", {"mode": "partial", "n": 2})
+    _write(fresh, "BENCH_x.json", {"mode": "full", "n": "2"})
+    assert run_gate(base, fresh) == 1
+
+
+def test_gate_empty_baseline_is_noop(dirs):
+    base, fresh = dirs
+    _write(fresh, "BENCH_case_batching.json", PAYLOAD)
+    assert run_gate(base, fresh) == 0
+
+
+def test_flatten_and_time_markers():
+    flat = flatten({"a": {"b": [1, {"c": 2}]}, "d": True})
+    assert flat == {"a.b.0": 1, "a.b.1.c": 2, "d": True}
+    assert is_time_derived("slot_vec.wall_s")
+    assert is_time_derived("pfcs_vec.tok_per_s")
+    assert is_time_derived("recovery_latency_mean_s")
+    assert is_time_derived("vec_vs_scalar_speedup")
+    assert not is_time_derived("slot_vec.ttft_ticks.99")
+    assert not is_time_derived("hbm_hit_rate")
+    assert not is_time_derived("migrated_bytes")
+
+
+def test_cli_entry(dirs, capsys):
+    base, fresh = dirs
+    _write(base, "BENCH_case_batching.json", PAYLOAD)
+    _write(fresh, "BENCH_case_batching.json", PAYLOAD)
+    assert main(["--baseline", str(base), "--fresh", str(fresh)]) == 0
+    assert main(["--baseline", str(base), "--fresh", str(base),
+                 "--rel-tol", "0.01"]) == 0
+
+
+def test_gate_against_checked_in_trajectory():
+    """The real checked-in BENCH files always gate cleanly against
+    themselves (guards the tool against schema drift in the payloads
+    the cases actually emit)."""
+    root = Path(__file__).resolve().parents[1]
+    if not list(root.glob("BENCH_*.json")):     # pragma: no cover
+        pytest.skip("no checked-in BENCH files")
+    assert run_gate(root, root) == 0

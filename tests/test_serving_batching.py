@@ -1,0 +1,332 @@
+"""Differential load-fuzz: the continuous-batching slot machine
+(DESIGN.md §10).
+
+The paper's determinism claims only matter under realistic ragged
+traffic, so the slot machine is pinned the same way every other tier
+is — an independent per-slot Python-loop oracle replays the IDENTICAL
+open-loop arrival trace and must end bit-exact:
+
+  * ``strategies.build_poisson_arrivals`` expands an ``ArrivalSpec``
+    into concrete (arrival, prompt, max_new, tenant) tuples;
+    ``drive_slots`` submits them into :class:`SlotMachine` (vectorized
+    int32 slot arrays) and :class:`SlotOracle` (per-slot loops) and
+    ticks both to idle;
+  * parity surface: all ``PARITY_COUNTERS``, per-touch tier log, exact
+    HBM LRU order, host set, prefetch log, per-request token streams
+    and tick timings (TTFT/completion), preemption/resume counts — and
+    the expert-cache counters when ``moe=`` composes;
+  * cross-stack: the machine on the vectorized cache must also match
+    the oracle on the SCALAR cache (engine parity composed with cache
+    parity), and sharded/elastic backends replay the same traces;
+  * invariants checked at every tick: no slot double-occupancy, slot
+    ages monotone within a phase, drain guarantee (no starvation even
+    under preemption thrash);
+  * adversarial mixes: all-short, all-long, burst-then-silence, 1-slot
+    engines, preemption pressure;
+  * chaos composition: elastic ``kill``/``resize`` events
+    (``strategies.build_failure_schedule``) injected mid-Poisson-load
+    must be invisible to placement — bit-exact vs an uninterrupted
+    oracle — with tenancy isolation proven after every tick.
+"""
+
+import numpy as np
+import pytest
+
+from strategies import (ArrivalSpec, ElasticEventSpec, arrival_specs,
+                        build_failure_schedule, build_poisson_arrivals,
+                        drive_slots, elastic_event_specs, given, settings,
+                        st)
+from repro.serving.expert_cache import EXPERT_PARITY_COUNTERS
+from repro.serving.kv_cache import PARITY_COUNTERS
+from repro.serving.slots import (PHASE_FREE, SlotMachine, SlotOracle,
+                                 poisson_arrival_ticks)
+
+# (max_batch, hbm_pages, prefetch_budget, reread_window, prefill_tokens,
+#  preempt_wait) — includes the degenerate 1-slot engine and thrash-level
+# preemption pressure
+ENGINE_CONFIGS = [
+    (4, 32, 2, 2, 12, 3),
+    (1, 8, 1, 1, 4, 2),          # 1-slot engine, tiny HBM
+    (8, 64, 4, 3, 32, None),     # no preemption
+    (3, 16, 0, 2, 8, 1),         # LRU-mode (budget 0), aggressive preempt
+]
+
+
+def _mk(cls, cfg, **kw):
+    b, hbm, budget, w, pf, pw = cfg
+    base = dict(max_batch=b, page_size=4, hbm_pages=hbm,
+                prefetch_budget=budget, reread_window=w,
+                prefill_tokens=pf, preempt_wait=pw)
+    base.update(kw)
+    return cls(**base)
+
+
+def _assert_parity(m, o, name):
+    assert m.tier_log == o.tier_log, name
+    for f in PARITY_COUNTERS:
+        assert getattr(m.pages.stats, f) == getattr(o.pages.stats, f), \
+            (name, f)
+    assert list(m.pages.hbm.items()) == list(o.pages.hbm.items()), name
+    assert m.pages.host == o.pages.host, name
+    assert m.pages.prefetch_log == o.pages.prefetch_log, name
+    assert (m.ticks, m.preemptions, m.resumes) \
+        == (o.ticks, o.preemptions, o.resumes), name
+    assert len(m.requests) == len(o.requests)
+    for rm, ro in zip(m.requests, o.requests):
+        assert rm.state == ro.state == "done", (name, rm.req_id)
+        assert rm.generated == ro.generated, (name, rm.req_id)
+        assert (rm.first_tick, rm.done_tick, rm.preemptions, rm.ttft(),
+                rm.tpot()) == (ro.first_tick, ro.done_tick, ro.preemptions,
+                               ro.ttft(), ro.tpot()), (name, rm.req_id)
+    if m.experts is not None:
+        for f in EXPERT_PARITY_COUNTERS:
+            assert getattr(m.experts.stats, f) \
+                == getattr(o.experts.stats, f), (name, f)
+        assert m.experts.prefetch_log == o.experts.prefetch_log, name
+
+
+def _run_pair(spec, cfg, mkv="vec", okv="vec", policy="continuous",
+              moe_pair=(None, None), tenants=None, name=""):
+    arrivals = build_poisson_arrivals(spec)
+    m = _mk(SlotMachine, cfg, kv=mkv, policy=policy, moe=moe_pair[0],
+            tenants=tenants, moe_experts=16, moe_slots=6, moe_groups=8)
+    o = _mk(SlotOracle, cfg, kv=okv, policy=policy, moe=moe_pair[1],
+            tenants=tenants, moe_experts=16, moe_slots=6, moe_groups=8)
+    drive_slots(m, arrivals)
+    drive_slots(o, arrivals)
+    _assert_parity(m, o, name or f"{mkv}-vs-{okv}")
+    return m, o
+
+
+# --------------------------------------------------------------------------- #
+# differential parity: machine == oracle, across backends and policies        #
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("cfg", ENGINE_CONFIGS)
+@pytest.mark.parametrize("seed", [0, 7])
+def test_machine_matches_oracle_pinned(cfg, seed):
+    spec = ArrivalSpec(seed=seed, n_requests=22, rate=1.5, burst_frac=0.25,
+                       silence_ticks=4, max_prompt=20, max_new=9)
+    _run_pair(spec, cfg, mkv="vec", okv="vec")
+
+
+@pytest.mark.parametrize("mkv,okv", [
+    ("vec", "scalar"),           # engine parity composed with cache parity
+    ("sharded", "scalar"),
+    ("elastic", "vec"),
+])
+def test_machine_matches_oracle_cross_stack(mkv, okv):
+    spec = ArrivalSpec(seed=3, n_requests=20, rate=2.0, max_prompt=24,
+                       max_new=8)
+    _run_pair(spec, ENGINE_CONFIGS[0], mkv=mkv, okv=okv)
+
+
+def test_lockstep_policy_parity_and_moe_tenancy_composition():
+    cfg = (4, 32, 2, 2, 12, None)
+    _run_pair(ArrivalSpec(seed=11, n_requests=18, rate=1.0, max_prompt=16,
+                          max_new=7),
+              cfg, policy="lockstep", name="lockstep")
+    _run_pair(ArrivalSpec(seed=11, n_requests=18, rate=1.0, max_prompt=16,
+                          max_new=7, n_tenants=2),
+              cfg, moe_pair=("vec", "scalar"), tenants=2,
+              name="moe+tenants")
+
+
+@given(spec=arrival_specs(), cfg=st.sampled_from(ENGINE_CONFIGS),
+       okv=st.sampled_from(["vec", "scalar"]))
+@settings(max_examples=10, deadline=None)
+def test_machine_matches_oracle_fuzz(spec, cfg, okv):
+    tenants = spec.n_tenants if spec.n_tenants > 1 else None
+    _run_pair(spec, cfg, mkv="vec", okv=okv, tenants=tenants,
+              name=f"fuzz-{okv}")
+
+
+@pytest.mark.parametrize("spec,label", [
+    (ArrivalSpec(seed=1, n_requests=24, rate=4.0, min_prompt=1,
+                 max_prompt=5, max_new=4), "all-short"),
+    (ArrivalSpec(seed=2, n_requests=8, rate=0.4, min_prompt=40,
+                 max_prompt=90, max_new=12), "all-long"),
+    (ArrivalSpec(seed=3, n_requests=20, rate=2.0, burst_frac=1.0,
+                 silence_ticks=0, max_new=10), "burst"),
+    (ArrivalSpec(seed=4, n_requests=16, rate=3.0, burst_frac=0.5,
+                 silence_ticks=20, max_new=8), "burst-then-silence"),
+])
+def test_adversarial_mixes(spec, label):
+    _run_pair(spec, ENGINE_CONFIGS[0], name=label)
+    _run_pair(spec, ENGINE_CONFIGS[1], name=f"{label}-1slot")
+
+
+# --------------------------------------------------------------------------- #
+# invariants: occupancy, ages, drain                                          #
+# --------------------------------------------------------------------------- #
+
+def test_slot_invariants_every_tick():
+    """No double occupancy; ages monotone within a (slot, request,
+    phase) span; slot_req <-> phase consistency."""
+    spec = ArrivalSpec(seed=9, n_requests=26, rate=2.5, burst_frac=0.4,
+                       max_prompt=22, max_new=9)
+    m = _mk(SlotMachine, ENGINE_CONFIGS[0], kv="vec")
+    prev = {}
+
+    def hook(eng):
+        occ = eng.phase != PHASE_FREE
+        rids = eng.slot_req[occ]
+        assert (eng.slot_req[~occ] == -1).all()
+        assert (rids >= 0).all()
+        assert len(set(rids.tolist())) == len(rids), "double occupancy"
+        for i in np.flatnonzero(occ):
+            i = int(i)
+            key = (int(eng.slot_req[i]), int(eng.phase[i]))
+            if prev.get(i) == key:
+                assert eng.age[i] == prev[f"age{i}"] + 1, \
+                    "age not monotone within phase"
+            else:
+                assert eng.age[i] == 0, "fresh phase must reset age"
+            prev[i] = key
+            prev[f"age{i}"] = int(eng.age[i])
+        for i in np.flatnonzero(~occ):
+            prev.pop(int(i), None)
+
+    drive_slots(m, build_poisson_arrivals(spec), step_hook=hook)
+    assert all(r.state == "done" for r in m.requests)
+
+
+def test_drain_guarantee_under_preemption_thrash():
+    """Heavy overload + aggressive preemption still completes every
+    request (FIFO re-queue means no starvation) — and the report sees
+    the preemptions."""
+    spec = ArrivalSpec(seed=5, n_requests=40, rate=8.0, burst_frac=1.0,
+                       max_prompt=12, max_new=14)
+    m = _mk(SlotMachine, (2, 8, 2, 2, 8, 1), kv="vec")
+    drive_slots(m, build_poisson_arrivals(spec))
+    rep = m.latency_report()
+    assert rep["completed"] == 40
+    assert rep["preemptions"] > 0
+    assert rep["tokens"] == sum(len(r.generated) for r in m.requests)
+
+
+def test_resume_prefetch_recovers_window_before_decode():
+    """The resume-prefetch invariant: a preempted request's re-admission
+    anchor touch factorization-recovers its successor pages, so its
+    first decode tick back hits prefetched pages instead of missing."""
+    m = SlotMachine(max_batch=1, page_size=2, hbm_pages=64,
+                    prefetch_budget=4, reread_window=2, prefill_tokens=32,
+                    preempt_wait=1, kv="vec")
+    m.submit(list(range(100, 116)), max_new_tokens=30, arrival=0)
+    m.submit(list(range(200, 208)), max_new_tokens=2, arrival=2)
+    m.run_until_idle()
+    assert m.preemptions >= 1 and m.resumes >= 1
+    assert m.pages.stats.prefetch_hits > 0
+    # the anchor's §4.2 scan produced real prefetch traffic
+    assert m.pages.prefetch_log
+    o = SlotOracle(max_batch=1, page_size=2, hbm_pages=64,
+                   prefetch_budget=4, reread_window=2, prefill_tokens=32,
+                   preempt_wait=1, kv="vec")
+    o.submit(list(range(100, 116)), max_new_tokens=30, arrival=0)
+    o.submit(list(range(200, 208)), max_new_tokens=2, arrival=2)
+    o.run_until_idle()
+    _assert_parity(m, o, "resume")
+
+
+def test_continuous_beats_lockstep_on_ragged_demand():
+    """The scheduling claim itself: same trace, same cost model —
+    continuous admission drains in fewer ticks (higher goodput) than
+    the gang-scheduled lockstep gate."""
+    spec = ArrivalSpec(seed=13, n_requests=30, rate=2.0, max_prompt=16,
+                       max_new=20)
+    arrivals = build_poisson_arrivals(spec)
+    cont = _mk(SlotMachine, (4, 64, 2, 2, 16, None), kv="vec")
+    lock = _mk(SlotMachine, (4, 64, 2, 2, 16, None), kv="vec",
+               policy="lockstep")
+    drive_slots(cont, arrivals)
+    drive_slots(lock, arrivals)
+    rc, rl = cont.latency_report(), lock.latency_report()
+    assert rc["tokens"] == rl["tokens"]
+    assert rc["goodput_tok_per_tick"] > rl["goodput_tok_per_tick"]
+    assert rc["ttft_ticks"][99] <= rl["ttft_ticks"][99]
+
+
+# --------------------------------------------------------------------------- #
+# chaos composition: elastic events + tenancy mid-Poisson-load                #
+# --------------------------------------------------------------------------- #
+
+def _chaos_pair(spec, espec, tenants=None, n_ticks_hint=200):
+    arrivals = build_poisson_arrivals(spec)
+    schedule = build_failure_schedule(espec, n_ticks_hint)
+    m = _mk(SlotMachine, ENGINE_CONFIGS[0], kv="elastic", tenants=tenants)
+    o = _mk(SlotOracle, ENGINE_CONFIGS[0], kv="vec", tenants=tenants)
+    hooks = []
+    if tenants is not None:
+        hooks.append(lambda eng: eng.pages.namespace.assert_isolated(
+            eng.pages.registry))
+    hook = (lambda eng: [h(eng) for h in hooks]) if hooks else None
+    # the oracle replays the SAME schedule: kill/resize no-op on its
+    # non-elastic cache (events must be invisible to placement), drop
+    # events mutate the workload identically on both
+    drive_slots(m, arrivals, schedule=schedule, step_hook=hook)
+    drive_slots(o, arrivals, schedule=schedule, step_hook=hook)
+    _assert_parity(m, o, "chaos")
+    return m
+
+
+@pytest.mark.parametrize("eseed", [0, 4])
+def test_elastic_chaos_mid_load_bit_exact(eseed):
+    spec = ArrivalSpec(seed=21, n_requests=24, rate=1.2, burst_frac=0.3,
+                       max_prompt=20, max_new=10)
+    espec = ElasticEventSpec(seed=eseed, n_events=5, kill=True, defer=True,
+                             resize=True, drop=True)
+    m = _chaos_pair(spec, espec)
+    assert m.pages.n_shards in (2, 4)
+
+
+@given(spec=arrival_specs(), espec=elastic_event_specs())
+@settings(max_examples=6, deadline=None)
+def test_elastic_chaos_fuzz(spec, espec):
+    _chaos_pair(spec, espec,
+                tenants=spec.n_tenants if spec.n_tenants > 1 else None)
+
+
+def test_chaos_with_tenancy_isolation_every_tick():
+    spec = ArrivalSpec(seed=31, n_requests=20, rate=1.5, n_tenants=2,
+                       max_prompt=18, max_new=8)
+    espec = ElasticEventSpec(seed=2, n_events=4, kill=True, resize=True)
+    m = _chaos_pair(spec, espec, tenants=2)
+    for t in range(2):
+        assert m.pages.qos.tenant_stats[t].prefetches == len(
+            m.pages.qos.tenant_logs[t])
+
+
+# --------------------------------------------------------------------------- #
+# arrival-trace builder + API edges                                           #
+# --------------------------------------------------------------------------- #
+
+def test_poisson_arrival_ticks_shapes():
+    t = poisson_arrival_ticks(50, rate=2.0, seed=1)
+    assert len(t) == 50 and (np.diff(t) >= 0).all() and (t >= 0).all()
+    b = poisson_arrival_ticks(40, rate=2.0, seed=1, burst_frac=0.5,
+                              silence_ticks=10)
+    assert (b[:20] == 0).all() and b[20:].min() >= 10
+    assert len(poisson_arrival_ticks(0, rate=1.0)) == 0
+
+
+def test_slot_api_edges():
+    with pytest.raises(ValueError):
+        SlotMachine(policy="nope")
+    with pytest.raises(ValueError):
+        SlotMachine(max_batch=0)
+    m = SlotMachine(max_batch=2, kv="vec")
+    with pytest.raises(ValueError):
+        m.submit([1, 2], tenant=1)          # tenants mode not enabled
+    with pytest.raises(ValueError):
+        m.resize(4)                          # needs kv="elastic"
+    mt = SlotMachine(max_batch=2, kv="vec", tenants=2)
+    with pytest.raises(ValueError):
+        mt.submit([1, 2], tenant=5)
+    # empty prompt goes straight to decode and still completes
+    m.submit([], max_new_tokens=3)
+    done = m.run_until_idle()
+    assert len(done) == 1 and len(done[0].generated) == 3
+    # drain guard trips instead of hanging
+    m.submit([1, 2, 3], max_new_tokens=4)
+    with pytest.raises(RuntimeError):
+        m.run_until_idle(max_ticks=1)

@@ -1,0 +1,167 @@
+#!/usr/bin/env python
+"""Benchmark trajectory regression gate over checked-in ``BENCH_*.json``.
+
+``benchmarks.run --smoke`` writes one ``BENCH_<case>.json`` per case to
+the repo root (``benchmarks.common.save_bench``); the files are checked
+in, so the git history IS the performance trajectory.  This gate makes
+the trajectory enforceable: CI snapshots the checked-in baselines,
+re-runs ``--smoke``, and compares the fresh files key-by-key.
+
+Comparison rules (per dotted leaf key, e.g.
+``slot_vec.goodput_tok_per_tick``):
+
+  * **time-derived metrics are skipped** — any key path containing a
+    wall-clock-ish component (``wall``, ``*_s``, ``*_ms``, ``per_s``,
+    ``latency``, ``speedup``) varies with machine load and would flake;
+    the deterministic counters are the contract.
+  * remaining numeric metrics must match within ``--rel-tol`` (default
+    0: placement counters, hit rates, tick timings, and percentiles
+    are fully deterministic, so ANY drift is a real behavior change);
+  * a key present in the baseline but missing fresh -> FAIL (a case
+    silently stopped reporting);
+  * a baseline file with no fresh counterpart -> FAIL (a case silently
+    stopped running);
+  * a fresh file or key with no baseline -> OK with a note (new case /
+    new metric: check in the new baseline with the PR that adds it).
+
+Exit 0 = gate passes, 1 = regression.  Usage (CI)::
+
+    mkdir /tmp/bench_baseline && cp BENCH_*.json /tmp/bench_baseline/
+    PYTHONPATH=src python -m benchmarks.run --smoke
+    python tools/check_bench_regression.py \
+        --baseline /tmp/bench_baseline --fresh .
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+
+# key-path components marking wall-clock-derived metrics (machine-load
+# dependent -> excluded from the deterministic contract)
+TIME_MARKERS = ("wall", "per_s", "latency", "speedup", "ttft_ms",
+                "tpot_ms")
+
+
+def is_time_derived(path: str) -> bool:
+    for part in path.lower().split("."):
+        if part.endswith(("_s", "_ms")):
+            return True
+        if any(marker in part for marker in TIME_MARKERS):
+            return True
+    return False
+
+
+def flatten(obj, prefix: str = "") -> dict:
+    """Nested JSON -> {dotted.path: leaf}; lists index numerically."""
+    out: dict = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(flatten(v, f"{prefix}{k}."))
+    elif isinstance(obj, (list, tuple)):
+        for i, v in enumerate(obj):
+            out.update(flatten(v, f"{prefix}{i}."))
+    else:
+        out[prefix[:-1]] = obj
+    return out
+
+
+def compare_case(name: str, base: dict, fresh: dict,
+                 rel_tol: float) -> tuple:
+    """Returns (failures, notes) for one BENCH file pair."""
+    failures, notes = [], []
+    b, f = flatten(base), flatten(fresh)
+    for key, bv in sorted(b.items()):
+        if is_time_derived(key):
+            continue
+        if key not in f:
+            failures.append(f"{name}: metric '{key}' missing from fresh "
+                            f"run (baseline {bv!r})")
+            continue
+        fv = f[key]
+        if isinstance(bv, bool) or not isinstance(bv, (int, float)):
+            if fv != bv:
+                failures.append(f"{name}: '{key}' changed "
+                                f"{bv!r} -> {fv!r}")
+            continue
+        if not isinstance(fv, (int, float)) or isinstance(fv, bool):
+            failures.append(f"{name}: '{key}' changed type "
+                            f"{bv!r} -> {fv!r}")
+            continue
+        if not math.isclose(fv, bv, rel_tol=rel_tol,
+                            abs_tol=rel_tol if bv == 0 else 0.0):
+            delta = (fv - bv) / bv * 100 if bv else float("inf")
+            failures.append(f"{name}: '{key}' drifted {bv!r} -> {fv!r} "
+                            f"({delta:+.2f}%, tol {rel_tol:.1%})")
+    for key in sorted(set(f) - set(b)):
+        if not is_time_derived(key):
+            notes.append(f"{name}: new metric '{key}' = {f[key]!r} "
+                         f"(no baseline; will be gated once checked in)")
+    return failures, notes
+
+
+def run_gate(baseline_dir: Path, fresh_dir: Path,
+             rel_tol: float = 0.0) -> int:
+    base_files = {p.name: p for p in sorted(baseline_dir.glob(
+        "BENCH_*.json"))}
+    fresh_files = {p.name: p for p in sorted(fresh_dir.glob(
+        "BENCH_*.json"))}
+    if not base_files:
+        print(f"bench gate: no BENCH_*.json baselines in {baseline_dir} "
+              f"— nothing to gate")
+        return 0
+    failures, notes = [], []
+    for name, bp in base_files.items():
+        if name not in fresh_files:
+            failures.append(f"{name}: baseline exists but the fresh run "
+                            f"produced no file — did its case stop "
+                            f"running?")
+            continue
+        fails, ns = compare_case(
+            name, json.loads(bp.read_text()),
+            json.loads(fresh_files[name].read_text()), rel_tol)
+        failures.extend(fails)
+        notes.extend(ns)
+    for name in sorted(set(fresh_files) - set(base_files)):
+        notes.append(f"{name}: new case (no baseline; check it in to "
+                     f"start gating it)")
+    for n in notes:
+        print(f"  note: {n}")
+    if failures:
+        print(f"bench gate: {len(failures)} regression(s) vs checked-in "
+              f"trajectory:")
+        for msg in failures:
+            print(f"  FAIL: {msg}")
+        return 1
+    n_metrics = sum(
+        sum(1 for k in flatten(json.loads(p.read_text()))
+            if not is_time_derived(k))
+        for p in base_files.values())
+    print(f"bench gate: OK — {len(base_files)} case file(s), "
+          f"{n_metrics} gated metrics, {len(notes)} note(s)")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="compare fresh BENCH_*.json against the checked-in "
+                    "trajectory")
+    ap.add_argument("--baseline", type=Path, required=True,
+                    help="directory holding the checked-in BENCH_*.json "
+                         "snapshot")
+    ap.add_argument("--fresh", type=Path, default=Path("."),
+                    help="directory the fresh --smoke run wrote "
+                         "BENCH_*.json into (default: repo root)")
+    ap.add_argument("--rel-tol", type=float, default=0.0,
+                    help="relative tolerance for numeric metrics "
+                         "(default 0: deterministic counters must match "
+                         "exactly)")
+    args = ap.parse_args(argv)
+    return run_gate(args.baseline, args.fresh, rel_tol=args.rel_tol)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
