@@ -94,6 +94,161 @@ def case_hft(seed: int = 0):
     return out
 
 
+def case_scale(smoke: bool = False):
+    """Million-element wide-registry scale case (the former 62-bit
+    ceiling, DESIGN.md §11).
+
+    Registers 1M data elements through Algorithm 1's MEM pool, builds
+    10k chains 100 deep (pairwise edges: ~990k composites) plus deep
+    whole-chain *group* relationships whose canonical chunks exceed
+    int64 — exactly the composites PR 6's guard used to reject with
+    ``OverflowError`` and the multi-limb registry now represents.  A
+    sampled sub-universe is then verified differentially: the limb
+    divisibility scan, staged factorization, and pairwise gcd kernels
+    against exact Python-int arithmetic, with zero false positives
+    asserted by re-factorization (Theorem 1).
+
+    Every reported metric except the ``*_wall_s`` timings is a
+    deterministic counter (fixed seeds, ascending allocation), so the
+    checked-in ``BENCH_case_scale.json`` gates the whole wide path.
+    """
+    from repro.core.assignment import PrimeAssigner
+    from repro.core.composite import (CompositeRegistry,
+                                      encode_relationship)
+    from repro.core.primes import CacheLevel, HierarchicalPrimeAllocator
+    from repro.kernels import (divisibility_scan_limbs,
+                               factorize_batch_exact, gcd_batch_exact)
+
+    n_chains, depth, max_bits = 10_000, 100, 1024
+    group_stride = 16                 # every 16th chain -> 625 groups
+    n_verify_chains = 24 if smoke else 64
+
+    registry = CompositeRegistry(max_bits=max_bits)
+    assigner = PrimeAssigner(HierarchicalPrimeAllocator(), registry)
+
+    # -- build: 1M elements, 10k chains 100 deep ------------------------
+    t0 = time.perf_counter()
+    prime_of = [assigner.assign(d, CacheLevel.MEM)
+                for d in range(n_chains * depth)]
+    assign_wall = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for c in range(n_chains):
+        base = c * depth
+        row = prime_of[base:base + depth]
+        for a, b in zip(row, row[1:]):
+            registry.register((a, b), kind="chain")
+        if c % group_stride == 0:
+            registry.register(row, kind="group")   # -> wide chunks
+    register_wall = time.perf_counter() - t0
+
+    comps = registry.composites_list()
+    wide = [c for c in comps if c.bit_length() > 63]
+    assert wide, "scale case must exercise composites beyond int64"
+    max_comp_bits = max(c.bit_length() for c in comps)
+
+    # -- differential verification on a sampled sub-universe ------------
+    # half the sampled chains carry a group relationship, half are
+    # edge-only; member primes of the sampled chains + small never-
+    # assigned primes form the query pool (MEM primes start >= 1e6, so
+    # 2..53 can never divide anything — negative controls).
+    sample_chains = ([c for c in range(0, n_chains, group_stride)
+                      [:n_verify_chains // 2]]
+                     + [c for c in range(1, n_chains, group_stride)
+                        [:n_verify_chains // 2]])
+    pool = sorted({p for c in sample_chains
+                   for p in prime_of[c * depth:(c + 1) * depth]})
+    negatives = [2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43,
+                 47, 53]
+    sample = []
+    for c in sample_chains:
+        row = prime_of[c * depth:(c + 1) * depth]
+        sample.extend(a * b for a, b in zip(row, row[1:]))
+        if c % group_stride == 0:
+            sample.extend(encode_relationship(row, max_bits))
+    assert all(c in registry._by_composite for c in sample)
+
+    from repro.core.composite import n_limbs_for_bits, pack_limbs
+    L = n_limbs_for_bits(max_bits)
+    limbs = pack_limbs(sample, L)
+    queries = pool[::7] + negatives
+
+    t0 = time.perf_counter()
+    idx = divisibility_scan_limbs(limbs, queries)
+    scan_wall = time.perf_counter() - t0
+    scan_hits = 0
+    for j, q in enumerate(queries):
+        want = [i for i, c in enumerate(sample) if c % q == 0]
+        assert list(idx[j]) == want, f"limb scan diverged at prime {q}"
+        scan_hits += len(want)
+    assert all(not len(idx[len(queries) - 16 + k]) for k in range(16)), \
+        "negative-control primes must hit nothing (Theorem 1)"
+
+    t0 = time.perf_counter()
+    factors, residual = factorize_batch_exact(sample, pool)
+    factor_wall = time.perf_counter() - t0
+    false_pos = 0
+    for c, fs, r in zip(sample, factors, residual):
+        prod = 1
+        for p in fs:
+            if c % p != 0:
+                false_pos += 1
+            prod *= p
+        assert prod * int(r) == c, "factor recovery must be exact"
+        assert int(r) == 1, "pool covers every member: residual must be 1"
+    assert false_pos == 0, "Theorem 1: zero false positives"
+
+    # gcd: each sampled group chunk vs its chain's first edge — the
+    # shared primes reconstruct exactly
+    ga = [c for c in sample if c.bit_length() > 63]
+    gb = [prime_of[c * depth] * prime_of[c * depth + 1]
+          for c in sample_chains if c % group_stride == 0
+          for _ in range(len(encode_relationship(
+              prime_of[c * depth:(c + 1) * depth], max_bits)))]
+    gb = gb[:len(ga)]
+    import math as _math
+    gs = gcd_batch_exact(ga, gb, pool)
+    assert gs == [_math.gcd(a, b) for a, b in zip(ga, gb)], \
+        "limb gcd diverged from exact host gcd"
+    gcd_nontrivial = sum(1 for g in gs if g > 1)
+
+    print(f"\n== Case study: million-element wide registry "
+          f"(max_bits={max_bits}, {L} limbs) ==")
+    print(f"  elements {len(prime_of):,}   chains {n_chains:,} x {depth} "
+          f"deep   composites {len(comps):,} ({len(wide):,} beyond "
+          f"int64, widest {max_comp_bits} bits)")
+    print(f"  verified {len(sample)} composites x {len(queries)} query "
+          f"primes: scan hits {scan_hits}, false positives {false_pos}, "
+          f"gcd pairs {len(gs)} ({gcd_nontrivial} nontrivial)")
+    print(f"  walls: assign {assign_wall:.1f}s  register "
+          f"{register_wall:.1f}s  scan {scan_wall:.2f}s  factorize "
+          f"{factor_wall:.2f}s")
+
+    emit("case_scale.n_elements", len(prime_of))
+    emit("case_scale.n_composites", len(comps))
+    emit("case_scale.n_wide_composites", len(wide))
+    emit("case_scale.max_composite_bits", max_comp_bits)
+    emit("case_scale.factor_false_positives", false_pos)
+    out = dict(
+        n_elements=len(prime_of), n_chains=n_chains, chain_depth=depth,
+        registry_max_bits=max_bits, n_limbs=L,
+        n_relationships=len(registry), n_composites=len(comps),
+        n_wide_composites=len(wide), max_composite_bits=max_comp_bits,
+        max_prime=max(prime_of),
+        verify=dict(
+            n_verified=len(sample), n_query_primes=len(queries),
+            scan_hits=scan_hits, factor_false_positives=false_pos,
+            residual_all_one=True, gcd_pairs=len(gs),
+            gcd_nontrivial=gcd_nontrivial,
+        ),
+        assign_wall_s=assign_wall, register_wall_s=register_wall,
+        scan_wall_s=scan_wall, factor_wall_s=factor_wall,
+    )
+    save_json("case_scale", out)
+    save_bench("case_scale", out)
+    return out
+
+
 def case_serving(smoke: bool = False, shards=None):
     """Serving-layer load benchmark: continuous batching over the paged
     KV cache.

@@ -22,9 +22,11 @@ def main(argv=None) -> None:
                          "plus the serving load case, the elastic "
                          "resize/recovery chaos case, the MoE "
                          "expert-serving case, the multi-tenant QoS "
-                         "case, and the continuous-batching Poisson "
-                         "load case (exercises every serving hot path "
-                         "on every PR)")
+                         "case, the continuous-batching Poisson "
+                         "load case, and the million-element wide-"
+                         "registry scale case (exercises every serving "
+                         "hot path and the multi-limb arithmetic on "
+                         "every PR)")
     ap.add_argument("--skip-roofline", action="store_true",
                     help="skip the dry-run-artifact roofline table")
     ap.add_argument("--scale", type=float, default=1.0,
@@ -51,6 +53,7 @@ def main(argv=None) -> None:
         cases.case_moe(smoke=True)
         cases.case_tenancy(smoke=True)
         cases.case_batching(smoke=True)
+        cases.case_scale(smoke=True)
         print(f"\ntotal benchmark wall time: {time.time() - t0:.1f}s")
         return
 
@@ -65,6 +68,7 @@ def main(argv=None) -> None:
     cases.case_moe()
     cases.case_tenancy()
     cases.case_batching()
+    cases.case_scale()
     kernel_bench.run()
 
     if not args.skip_roofline:

@@ -1,10 +1,11 @@
-"""Serve a small model with batched requests through the continuous-
-batching engine + the vectorized PFCS paged KV cache (prefix sharing,
-table-driven page prefetch).
+"""Serve a small model with batched requests through the PFCS serving
+stack (prefix sharing, table-driven page prefetch).
 
-Two passes: a real smoke-scale model at small batch, then the
-null-model load-generator mode at 128 concurrent slots — the serving
-hot path the load benchmark (`benchmarks.cases.case_serving`) measures.
+Two passes: a real smoke-scale model at small batch through the
+``ServingEngine`` decode loop, then the null-model load-generator mode
+at 128 concurrent slots through the continuous-batching ``SlotMachine``
+front-end (DESIGN.md §10) — the serving hot path the load benchmarks
+(`benchmarks.cases.case_serving` / `case_batching`) measure.
 
     PYTHONPATH=src python examples/serve_lm.py
 """

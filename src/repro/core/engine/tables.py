@@ -184,17 +184,24 @@ def successor_table(registry, assigner, data_ids: Sequence[int],
         raise ValueError(f"discover must be 'host' or 'kernel', "
                          f"got {discover!r}")
 
-    from repro.kernels.ops import divisibility_scan, factorize_batch
+    from repro.kernels.ops import (divisibility_scan,
+                                   divisibility_scan_limbs, factorize_batch,
+                                   factorize_batch_exact)
 
-    arr = registry.composites_array()
+    wide = getattr(registry, "wide", False)
+    arr = registry.composites_view() if wide else registry.composites_array()
     if arr.size == 0 or not keyed:
         return {d: [] for d, _ in keyed}
 
     # kernel pass 1: registry divisibility scan, chunked over query primes
+    # (wide registries route through the multi-limb kernels — same mask
+    # semantics, DESIGN.md §11)
     primes = np.asarray([p for _, p in keyed], dtype=np.int64)
+    scan_input = registry.limbs_array() if wide else arr
+    scan = divisibility_scan_limbs if wide else divisibility_scan
     cand: List[np.ndarray] = []
     for lo in range(0, len(primes), chunk):
-        cand.extend(divisibility_scan(arr, primes[lo:lo + chunk]))
+        cand.extend(scan(scan_input, primes[lo:lo + chunk]))
 
     # kernel pass 2: decode every candidate composite once (Theorem 1
     # check: the decoded factors must contain the query prime)
@@ -202,8 +209,9 @@ def successor_table(registry, assigner, data_ids: Sequence[int],
     factors_of: Dict[int, set] = {}
     if needed:
         comps = arr[np.asarray(needed)]
-        facs, residual = factorize_batch(comps, registry.primes_array())
-        assert np.all(residual == 1), "registry composite escaped its pool"
+        facs, residual = factorize_batch_exact(comps, registry.primes_array())
+        assert all(int(r) == 1 for r in residual), \
+            "registry composite escaped its pool"
         for c, fs in zip(comps, facs):
             factors_of[int(c)] = set(fs)
 

@@ -10,8 +10,12 @@ Validated in interpret mode on CPU; compiled path targets TPU (see
 DESIGN.md §3 for the int-width adaptation notes).
 """
 
-from .ops import (INT32_SAFE_LIMIT, divisibility_scan, factorize_batch,
-                  gcd_batch)
+from .ops import (INT32_SAFE_LIMIT, INT64_SAFE_LIMIT, divisibility_scan,
+                  divisibility_scan_limbs, factorize_batch,
+                  factorize_batch_exact, factorize_batch_limbs, gcd_batch,
+                  gcd_batch_exact, gcd_batch_limbs)
 
-__all__ = ["INT32_SAFE_LIMIT", "divisibility_scan", "factorize_batch",
-           "gcd_batch"]
+__all__ = ["INT32_SAFE_LIMIT", "INT64_SAFE_LIMIT", "divisibility_scan",
+           "divisibility_scan_limbs", "factorize_batch",
+           "factorize_batch_exact", "factorize_batch_limbs", "gcd_batch",
+           "gcd_batch_exact", "gcd_batch_limbs"]

@@ -32,9 +32,162 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.experimental import pallas as pl
 
-__all__ = ["factorize_squarefree_pallas", "divisibility_mask_pallas"]
+__all__ = ["factorize_squarefree_pallas", "divisibility_mask_pallas",
+           "divisibility_mask_limbs_pallas", "factorize_limbs_pallas"]
+
+# ----------------------------------------------------------------------- #
+# multi-limb variants (DESIGN.md §11)                                     #
+# ----------------------------------------------------------------------- #
+# Composites wider than 63 bits arrive as (N, L) little-endian 32-bit
+# limbs in int64 lanes.  All arithmetic is exact integer:
+#
+#   Horner mod      r = (r * 2**32 + limb) % p      r < p < 2**31
+#                   => r * 2**32 + limb < p * 2**32 <= 2**63        OK
+#   short division  cur = carry * 2**32 + limb; q, carry = divmod(cur, p)
+#                   carry < p < 2**31 => cur < 2**63                OK
+#
+# so every intermediate fits a signed int64 as long as primes fit 31 bits
+# (MAX_PRIME_BITS in core.composite — the pools never mint larger).  The
+# limb count L is static (baked into the traced program), tiles are
+# (BN, L) composites x (1, BP) primes exactly like the flat kernels.
+
+_LIMB_BITS = 32
+_LIMB_BASE = 1 << _LIMB_BITS
+
+
+def _horner_mod(limbs, p):
+    """Remainder of an (BN, L)-limb composite modulo (1, BP) primes.
+
+    Little-endian limbs evaluated most-significant-first (Horner);
+    returns (BN, BP) remainders.  ``p`` must be sanitized > 0.
+    """
+    bn, L = limbs.shape
+    r = jnp.zeros((bn, p.shape[1]), dtype=jnp.int64)
+    for k in reversed(range(L)):
+        r = (r * _LIMB_BASE + limbs[:, k:k + 1]) % p
+    return r
+
+
+def _short_div(limbs, p):
+    """Exact division of (BN, L) limbs by a scalar prime p (int64).
+
+    Most-significant-first schoolbook short division; returns the
+    quotient limbs.  Caller guarantees divisibility (squarefree exact
+    path) — the final carry is the remainder and is discarded.
+    """
+    bn, L = limbs.shape
+    carry = jnp.zeros((bn,), dtype=jnp.int64)
+    out = [None] * L
+    for k in reversed(range(L)):
+        cur = carry * _LIMB_BASE + limbs[:, k]
+        out[k] = cur // p
+        carry = cur % p
+    return jnp.stack(out, axis=1)
+
+
+def _divmask_limbs_kernel(c_ref, p_ref, mask_ref):
+    limbs = c_ref[...]                       # (BN, L)
+    p = p_ref[...]                           # (1, BP)
+    safe_p = jnp.where(p <= 1, jnp.ones_like(p), p)
+    mask_ref[...] = jnp.logical_and(_horner_mod(limbs, safe_p) == 0, p > 1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_p", "interpret"))
+def divisibility_mask_limbs_pallas(
+    limbs: jnp.ndarray,        # (N, L) int64 32-bit limbs, N % block_n == 0
+    primes: jnp.ndarray,       # (P,)  int64, P % block_p == 0
+    *,
+    block_n: int = 256,
+    block_p: int = 512,
+    interpret: bool = True,
+):
+    """Wide §4.2 prefetch scan: mask[i, j] = primes[j] | composite(limbs[i]).
+
+    Limb rows of all-zero / value-1 composites (padding) match nothing;
+    zero-padded primes never divide (same pad contract as the flat
+    kernel).
+    """
+    n, L = limbs.shape
+    p = primes.shape[0]
+    assert n % block_n == 0 and p % block_p == 0, (n, p, block_n, block_p)
+    grid = (n // block_n, p // block_p)
+    return pl.pallas_call(
+        _divmask_limbs_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, L), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_p), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_p), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, p), jnp.bool_),
+        interpret=interpret,
+    )(limbs, primes.reshape(1, p))
+
+
+def _factorize_limbs_kernel(c_ref, p_ref, mask_ref, res_ref, *, block_p: int):
+    j = pl.program_id(1)
+    limbs = c_ref[...]                       # (BN, L)
+    p = p_ref[...]                           # (1, BP)
+    safe_p = jnp.where(p <= 1, jnp.ones_like(p), p)
+    divides = jnp.logical_and(_horner_mod(limbs, safe_p) == 0, p > 1)
+    mask_ref[...] = divides
+
+    @pl.when(j == 0)
+    def _init():
+        res_ref[...] = limbs
+
+    # peel off every dividing prime of this tile sequentially: short
+    # division is inherently most-significant-first, so unlike the flat
+    # kernel there is no one-shot tile-product divide — but the body is
+    # traced ONCE (fori_loop) and each trip is L exact int64 ops/lane.
+    def body(jj, res):
+        pj = lax.dynamic_index_in_dim(safe_p[0], jj, keepdims=False)
+        div = lax.dynamic_index_in_dim(divides, jj, axis=1, keepdims=False)
+        return jnp.where(div[:, None], _short_div(res, pj), res)
+
+    res_ref[...] = lax.fori_loop(0, block_p, body, res_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_p", "interpret"))
+def factorize_limbs_pallas(
+    limbs: jnp.ndarray,        # (N, L) int64 32-bit limbs, N % block_n == 0
+    primes: jnp.ndarray,       # (P,)  int64, P % block_p == 0
+    *,
+    block_n: int = 256,
+    block_p: int = 512,
+    interpret: bool = True,
+):
+    """Wide squarefree factorization: ``(mask (N, P) bool, residual
+    (N, L))`` where the residual limbs hold the cofactor after dividing
+    out every dividing pool prime (limb value 1 when fully factored).
+    Same grid/accumulator shape as :func:`factorize_squarefree_pallas`
+    with the residual tile carrying L limbs instead of one word.
+    """
+    n, L = limbs.shape
+    p = primes.shape[0]
+    assert n % block_n == 0 and p % block_p == 0, (n, p, block_n, block_p)
+    grid = (n // block_n, p // block_p)
+    mask, residual = pl.pallas_call(
+        functools.partial(_factorize_limbs_kernel, block_p=block_p),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, L), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_p), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, block_p), lambda i, j: (i, j)),
+            pl.BlockSpec((block_n, L), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, p), jnp.bool_),
+            jax.ShapeDtypeStruct((n, L), jnp.int64),
+        ],
+        interpret=interpret,
+    )(limbs, primes.reshape(1, p))
+    return mask, residual
 
 
 def _factorize_kernel(c_ref, p_ref, mask_ref, res_ref):

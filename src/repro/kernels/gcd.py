@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
-__all__ = ["gcd_pallas"]
+__all__ = ["gcd_pallas", "gcd_limbs_pallas"]
 
 _TRIPS = {jnp.dtype(jnp.int32): 48, jnp.dtype(jnp.int64): 96}
 
@@ -72,3 +72,104 @@ def gcd_pallas(
         interpret=interpret,
     )(a2, b2)
     return out.reshape(n)
+
+
+# ----------------------------------------------------------------------- #
+# multi-limb variant (DESIGN.md §11)                                      #
+# ----------------------------------------------------------------------- #
+# Multi-limb Euclid needs long division with normalization — hostile to
+# the VPU.  PFCS composites let us sidestep it: chunk values are
+# SQUAREFREE products of pool primes, so
+#
+#     gcd(a, b) = prod { p in pool : p | a  and  p | b }
+#
+# exactly (unique factorization — Theorem 1).  The kernel computes both
+# divisibility masks with the Horner-mod ladder and rebuilds the gcd by
+# masked schoolbook scalar multiplication into a limb accumulator:
+#
+#     t = g_limb * p + carry     g_limb < 2**32, p < 2**31, carry < 2**31
+#                                => t < 2**63                         OK
+#
+# The caller supplies the prime pool covering the common factors (any
+# superset of either side's member primes works — common primes are a
+# subset of both).
+
+_LIMB_BITS = 32
+_LIMB_BASE = 1 << _LIMB_BITS
+_LIMB_MASK = _LIMB_BASE - 1
+
+
+def _horner_mod_g(limbs, p):
+    r = jnp.zeros((limbs.shape[0], p.shape[1]), dtype=jnp.int64)
+    for k in reversed(range(limbs.shape[1])):
+        r = (r * _LIMB_BASE + limbs[:, k:k + 1]) % p
+    return r
+
+
+def _gcd_limbs_kernel(a_ref, b_ref, p_ref, o_ref, *, block_p: int):
+    j = pl.program_id(1)
+    a = a_ref[...]                           # (BN, L)
+    b = b_ref[...]                           # (BN, L)
+    p = p_ref[...]                           # (1, BP)
+    L = a.shape[1]
+    safe_p = jnp.where(p <= 1, jnp.ones_like(p), p)
+    common = jnp.logical_and(
+        jnp.logical_and(_horner_mod_g(a, safe_p) == 0,
+                        _horner_mod_g(b, safe_p) == 0),
+        p > 1)                               # (BN, BP)
+
+    # accumulator: limb value 1 on the first prime tile
+    @pl.when(j == 0)
+    def _init():
+        one = jnp.zeros_like(a)
+        o_ref[...] = one.at[:, 0].set(1)
+
+    def body(jj, g):
+        pj = lax.dynamic_index_in_dim(safe_p[0], jj, keepdims=False)
+        take = lax.dynamic_index_in_dim(common, jj, axis=1, keepdims=False)
+        carry = jnp.zeros((g.shape[0],), dtype=jnp.int64)
+        out = []
+        for k in range(L):
+            t = g[:, k] * pj + carry
+            out.append(t & _LIMB_MASK)
+            carry = t >> _LIMB_BITS
+        mul = jnp.stack(out, axis=1)
+        return jnp.where(take[:, None], mul, g)
+
+    o_ref[...] = lax.fori_loop(0, block_p, body, o_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_p", "interpret"))
+def gcd_limbs_pallas(
+    a: jnp.ndarray,            # (N, L) int64 32-bit limbs, N % block_n == 0
+    b: jnp.ndarray,            # (N, L) same
+    pool: jnp.ndarray,         # (P,)  int64 primes covering common factors
+    *,
+    block_n: int = 256,
+    block_p: int = 512,
+    interpret: bool = True,
+):
+    """Elementwise gcd of squarefree multi-limb composite pairs.
+
+    Exact for chunk values that are products of distinct ``pool`` primes
+    (the registry invariant).  Pad rows (limb value 0 or 1) and
+    zero-padded pool primes yield gcd 1 — callers slice to the live
+    prefix, matching the flat kernel's contract.
+    """
+    n, L = a.shape
+    assert a.shape == b.shape, (a.shape, b.shape)
+    p = pool.shape[0]
+    assert n % block_n == 0 and p % block_p == 0, (n, p, block_n, block_p)
+    grid = (n // block_n, p // block_p)
+    return pl.pallas_call(
+        functools.partial(_gcd_limbs_kernel, block_p=block_p),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, L), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, L), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_p), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_n, L), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, L), jnp.int64),
+        interpret=interpret,
+    )(a, b, pool.reshape(1, p))

@@ -19,14 +19,25 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
-from .factorize import divisibility_mask_pallas, factorize_squarefree_pallas
-from .gcd import gcd_pallas
+from repro.core.composite import (LIMB_BITS, limbs_to_int, n_limbs_for_bits,
+                                  pack_limbs, unpack_limbs)
+
+from .factorize import (divisibility_mask_limbs_pallas,
+                        divisibility_mask_pallas, factorize_limbs_pallas,
+                        factorize_squarefree_pallas)
+from .gcd import gcd_limbs_pallas, gcd_pallas
 
 __all__ = ["factorize_batch", "divisibility_scan", "gcd_batch",
-           "INT32_SAFE_LIMIT"]
+           "divisibility_scan_limbs", "factorize_batch_limbs",
+           "gcd_batch_limbs", "factorize_batch_exact", "gcd_batch_exact",
+           "INT32_SAFE_LIMIT", "INT64_SAFE_LIMIT"]
 
 # composites below this fit the int32 fast path
 INT32_SAFE_LIMIT = 2**31 - 1
+
+# composites below this fit the flat int64 kernels; anything larger takes
+# the multi-limb path (DESIGN.md §11)
+INT64_SAFE_LIMIT = 2**63 - 1
 
 
 def _interpret_default() -> bool:
@@ -139,3 +150,164 @@ class _nullcontext:
 
     def __exit__(self, *a):
         return False
+
+
+# --------------------------------------------------------------------------- #
+# multi-limb wrappers + exact dispatchers (DESIGN.md §11)                      #
+# --------------------------------------------------------------------------- #
+# Python ints in, Python ints out: the wrappers pack arbitrary-precision
+# composites into (N, L) 32-bit-limb int64 matrices for the limb kernels
+# and unpack results exactly.  The ``*_exact`` dispatchers pick the flat
+# int64 kernels when every value fits a machine word (bit-identical to
+# the narrow path) and the limb kernels otherwise, so consumers stay
+# mode-agnostic.
+
+def _as_limbs(values, n_limbs: int | None) -> np.ndarray:
+    """Values -> (N, L) limb matrix; passes (N, L) arrays through."""
+    if isinstance(values, np.ndarray) and values.ndim == 2 \
+            and values.dtype != object:
+        assert n_limbs is None or values.shape[1] == n_limbs
+        return values.astype(np.int64)
+    vals = [int(v) for v in values]
+    if n_limbs is None:
+        n_limbs = max(1, n_limbs_for_bits(max(
+            (v.bit_length() for v in vals), default=1)))
+    return pack_limbs(vals, n_limbs)
+
+
+def divisibility_scan_limbs(
+    registry_limbs: np.ndarray,     # (N, L) limbs OR sequence of ints
+    query_primes: Sequence[int],
+    block_n: int = 256,
+    block_p: int = 512,
+    interpret: bool | None = None,
+    n_limbs: int | None = None,
+) -> List[np.ndarray]:
+    """Wide §4.2 scan: per query prime, indices of dividing composites."""
+    if interpret is None:
+        interpret = _interpret_default()
+    limbs = _as_limbs(registry_limbs, n_limbs)
+    qs = np.asarray(list(query_primes), dtype=np.int64)
+    n, q = limbs.shape[0], qs.shape[0]
+    if n == 0 or q == 0:
+        return [np.empty(0, dtype=np.int64) for _ in range(q)]
+    limbs_p = np.concatenate(
+        [limbs, _pad_rows_one(limbs.shape[1], (-n) % block_n)]) \
+        if n % block_n else limbs
+    qs_p = _pad_to(qs, block_p, 0)
+    with enable_x64(True):
+        mask = divisibility_mask_limbs_pallas(
+            jnp.asarray(limbs_p), jnp.asarray(qs_p),
+            block_n=block_n, block_p=block_p, interpret=interpret)
+        mask = np.asarray(mask)[:n, :q]
+    return [np.nonzero(mask[:, j])[0] for j in range(q)]
+
+
+def _pad_rows_one(L: int, rows: int) -> np.ndarray:
+    """Pad rows encoding composite value 1 (divides nothing)."""
+    out = np.zeros((rows, L), dtype=np.int64)
+    if rows:
+        out[:, 0] = 1
+    return out
+
+
+def factorize_batch_limbs(
+    composites,                     # sequence of ints OR (N, L) limbs
+    primes: Sequence[int],
+    block_n: int = 256,
+    block_p: int = 512,
+    interpret: bool | None = None,
+    n_limbs: int | None = None,
+) -> Tuple[List[List[int]], List[int]]:
+    """Wide :func:`factorize_batch`: residuals come back as exact Python
+    ints (1 when the pool fully factors the composite)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    limbs = _as_limbs(composites, n_limbs)
+    pool = np.asarray(list(primes), dtype=np.int64)
+    n, p = limbs.shape[0], pool.shape[0]
+    if n == 0:
+        return [], []
+    limbs_p = np.concatenate(
+        [limbs, _pad_rows_one(limbs.shape[1], (-n) % block_n)]) \
+        if n % block_n else limbs
+    pool_p = _pad_to(pool, block_p, 0)
+    with enable_x64(True):
+        mask, residual = factorize_limbs_pallas(
+            jnp.asarray(limbs_p), jnp.asarray(pool_p),
+            block_n=block_n, block_p=block_p, interpret=interpret)
+        mask = np.asarray(mask)[:n, :p]
+        residual = np.asarray(residual)[:n]
+    factors = [[int(pool[j]) for j in np.nonzero(mask[i])[0]]
+               for i in range(n)]
+    return factors, unpack_limbs(residual)
+
+
+def gcd_batch_limbs(
+    a, b,                           # sequences of ints OR (N, L) limbs
+    pool: Sequence[int],
+    block_n: int = 256,
+    block_p: int = 512,
+    interpret: bool | None = None,
+    n_limbs: int | None = None,
+) -> List[int]:
+    """Wide elementwise gcd of squarefree composite pairs, exact Python
+    ints out.  ``pool`` must cover the common member primes (either
+    side's prime set suffices — see ``gcd_limbs_pallas``)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    if n_limbs is None and not (isinstance(a, np.ndarray) and a.ndim == 2):
+        hi = max((int(v).bit_length() for v in [*a, *b]), default=1)
+        n_limbs = max(1, n_limbs_for_bits(hi))
+    aa = _as_limbs(a, n_limbs)
+    bb = _as_limbs(b, n_limbs if n_limbs is not None else aa.shape[1])
+    assert aa.shape == bb.shape, (aa.shape, bb.shape)
+    pl_ = np.asarray(list(pool), dtype=np.int64)
+    n = aa.shape[0]
+    if n == 0:
+        return []
+    pad = (-n) % block_n
+    if pad:
+        aa = np.concatenate([aa, _pad_rows_one(aa.shape[1], pad)])
+        bb = np.concatenate([bb, _pad_rows_one(bb.shape[1], pad)])
+    pool_p = _pad_to(pl_, block_p, 0)
+    with enable_x64(True):
+        g = gcd_limbs_pallas(jnp.asarray(aa), jnp.asarray(bb),
+                             jnp.asarray(pool_p), block_n=block_n,
+                             block_p=block_p, interpret=interpret)
+        g = np.asarray(g)[:n]
+    return unpack_limbs(g)
+
+
+def factorize_batch_exact(
+    composites: Sequence[int],
+    primes: Sequence[int],
+    **kw,
+) -> Tuple[List[List[int]], List[int]]:
+    """Width-agnostic factorize: flat int64 kernels when every composite
+    fits, limb kernels otherwise.  Residuals are Python ints either way."""
+    vals = [int(c) for c in composites]
+    if not vals:
+        return [], []
+    if max(vals) <= INT64_SAFE_LIMIT:
+        facs, residual = factorize_batch(vals, primes, **kw)
+        return facs, [int(r) for r in residual]
+    return factorize_batch_limbs(vals, primes, **kw)
+
+
+def gcd_batch_exact(
+    a: Sequence[int],
+    b: Sequence[int],
+    pool: Sequence[int],
+    **kw,
+) -> List[int]:
+    """Width-agnostic elementwise gcd (see :func:`gcd_batch_limbs` for
+    the squarefree/pool contract of the wide path)."""
+    va = [int(x) for x in a]
+    vb = [int(x) for x in b]
+    if not va:
+        return []
+    if max(max(va), max(vb)) <= INT64_SAFE_LIMIT:
+        return [int(g) for g in gcd_batch(va, vb, **{
+            k: v for k, v in kw.items() if k in ("block_n", "interpret")})]
+    return gcd_batch_limbs(va, vb, pool, **kw)

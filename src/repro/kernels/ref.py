@@ -7,9 +7,14 @@ no tolerance needed).
 
 from __future__ import annotations
 
-import jax.numpy as jnp
+import math
 
-__all__ = ["divisibility_mask_ref", "factorize_squarefree_ref", "gcd_ref"]
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["divisibility_mask_ref", "factorize_squarefree_ref", "gcd_ref",
+           "divisibility_mask_limbs_ref", "factorize_limbs_ref",
+           "gcd_limbs_ref"]
 
 
 def divisibility_mask_ref(composites: jnp.ndarray, primes: jnp.ndarray) -> jnp.ndarray:
@@ -46,3 +51,57 @@ def factorize_squarefree_ref(composites: jnp.ndarray, primes: jnp.ndarray):
 def gcd_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     """Elementwise gcd (Euclid), same shape/dtype in and out."""
     return jnp.gcd(a, b)
+
+
+# ----------------------------------------------------------------------- #
+# multi-limb oracles (DESIGN.md §11)                                      #
+# ----------------------------------------------------------------------- #
+# Ground truth for the limb kernels is arbitrary-precision Python-int
+# arithmetic: unpack limbs -> exact int ops -> repack.  Deliberately NOT
+# jnp — there is nothing to get subtly wrong here, which is the point of
+# an oracle.
+
+def _unpack(limbs: np.ndarray):
+    from repro.core.composite import unpack_limbs
+    return unpack_limbs(np.asarray(limbs))
+
+
+def divisibility_mask_limbs_ref(limbs: np.ndarray, primes) -> np.ndarray:
+    """mask[i, j] = primes[j] divides the composite encoded by limbs[i].
+
+    limbs: (N, L) int64 little-endian 32-bit limbs -> (N, P) bool; pad
+    primes <= 1 never divide (same contract as the flat kernel).
+    """
+    vals = _unpack(limbs)
+    ps = [int(p) for p in np.asarray(primes)]
+    return np.array([[p > 1 and v % p == 0 for p in ps] for v in vals],
+                    dtype=bool).reshape(len(vals), len(ps))
+
+
+def factorize_limbs_ref(limbs: np.ndarray, primes):
+    """Wide squarefree factorization oracle: ``(mask, residual_limbs)``
+    with the residual repacked at the input limb width."""
+    from repro.core.composite import pack_limbs
+    vals = _unpack(limbs)
+    ps = [int(p) for p in np.asarray(primes)]
+    mask = divisibility_mask_limbs_ref(limbs, primes)
+    residuals = []
+    for i, v in enumerate(vals):
+        for j, p in enumerate(ps):
+            if mask[i, j]:
+                v //= p
+        residuals.append(v)
+    return mask, pack_limbs(residuals, np.asarray(limbs).shape[1])
+
+
+def gcd_limbs_ref(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Elementwise exact gcd of limb-encoded pairs, repacked limbs.
+
+    This is FULL math.gcd — it equals the kernel's pool-reconstruction
+    gcd exactly when both sides are squarefree products of pool primes
+    (the registry invariant the differential fuzz pins).
+    """
+    from repro.core.composite import pack_limbs
+    va, vb = _unpack(a), _unpack(b)
+    return pack_limbs([math.gcd(x, y) for x, y in zip(va, vb)],
+                      np.asarray(a).shape[1])

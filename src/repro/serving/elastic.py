@@ -98,10 +98,12 @@ class ElasticShardedPagedKVCache(ShardedPagedKVCache):
 
     def __init__(self, hbm_pages: int = 1024, page_size: int = 16,
                  prefetch_budget: int = 4, n_shards: int = 2,
-                 mesh="auto", stripes_per_shard: int = 8):
+                 mesh="auto", stripes_per_shard: int = 8,
+                 max_bits: int = 62):
         super().__init__(hbm_pages=hbm_pages, page_size=page_size,
                          prefetch_budget=prefetch_budget, n_shards=n_shards,
-                         mesh=mesh, stripes_per_shard=stripes_per_shard)
+                         mesh=mesh, stripes_per_shard=stripes_per_shard,
+                         max_bits=max_bits)
         self.slices = ShardSlices(self.partition)
         self.dead_shards: set = set()
         self.recoveries = 0

@@ -80,7 +80,7 @@ _STUB_VOCAB = 32_000
 
 def make_kv_backend(kv: str, *, hbm_pages: int, page_size: int,
                     prefetch_budget: int, shards: int = 2, mesh="auto",
-                    tenants=None) -> PagedKVCache:
+                    tenants=None, max_bits: int = 62) -> PagedKVCache:
     """Construct a paged-KV cache backend by name — the single backend
     registry every engine front-end shares (``ServingEngine`` and the
     continuous-batching :class:`~repro.serving.slots.SlotMachine`).
@@ -88,7 +88,8 @@ def make_kv_backend(kv: str, *, hbm_pages: int, page_size: int,
     ``kv`` is one of ``"vec" | "scalar" | "sharded" | "elastic"``;
     ``tenants`` (an int or a :class:`~repro.tenancy.TenantQoSConfig`)
     selects the tenant-namespaced variant of the same backend
-    (DESIGN.md §8)."""
+    (DESIGN.md §8).  ``max_bits > 63`` runs the registry in multi-limb
+    wide mode (DESIGN.md §11) — every backend composes unchanged."""
     if tenants is not None:
         from repro.tenancy.qos import (
             TenantedElasticShardedPagedKVCache, TenantedPagedKVCache,
@@ -96,36 +97,41 @@ def make_kv_backend(kv: str, *, hbm_pages: int, page_size: int,
         if kv == "vec":
             return TenantedVectorizedPagedKVCache(
                 hbm_pages=hbm_pages, page_size=page_size,
-                prefetch_budget=prefetch_budget, qos=tenants)
+                prefetch_budget=prefetch_budget, qos=tenants,
+                max_bits=max_bits)
         if kv == "scalar":
             return TenantedPagedKVCache(
                 hbm_pages=hbm_pages, page_size=page_size,
-                prefetch_budget=prefetch_budget, qos=tenants)
+                prefetch_budget=prefetch_budget, qos=tenants,
+                max_bits=max_bits)
         if kv == "sharded":
             return TenantedShardedPagedKVCache(
                 hbm_pages=hbm_pages, page_size=page_size,
                 prefetch_budget=prefetch_budget, n_shards=shards,
-                mesh=mesh, qos=tenants)
+                mesh=mesh, qos=tenants, max_bits=max_bits)
         if kv == "elastic":
             return TenantedElasticShardedPagedKVCache(
                 hbm_pages=hbm_pages, page_size=page_size,
                 prefetch_budget=prefetch_budget, n_shards=shards,
-                mesh=mesh, qos=tenants)
+                mesh=mesh, qos=tenants, max_bits=max_bits)
     elif kv == "vec":
         return VectorizedPagedKVCache(
             hbm_pages=hbm_pages, page_size=page_size,
-            prefetch_budget=prefetch_budget)
+            prefetch_budget=prefetch_budget, max_bits=max_bits)
     elif kv == "scalar":
         return PagedKVCache(hbm_pages=hbm_pages, page_size=page_size,
-                            prefetch_budget=prefetch_budget)
+                            prefetch_budget=prefetch_budget,
+                            max_bits=max_bits)
     elif kv == "sharded":
         return ShardedPagedKVCache(
             hbm_pages=hbm_pages, page_size=page_size,
-            prefetch_budget=prefetch_budget, n_shards=shards, mesh=mesh)
+            prefetch_budget=prefetch_budget, n_shards=shards, mesh=mesh,
+            max_bits=max_bits)
     elif kv == "elastic":
         return ElasticShardedPagedKVCache(
             hbm_pages=hbm_pages, page_size=page_size,
-            prefetch_budget=prefetch_budget, n_shards=shards, mesh=mesh)
+            prefetch_budget=prefetch_budget, n_shards=shards, mesh=mesh,
+            max_bits=max_bits)
     raise ValueError(f"kv must be 'vec', 'scalar', 'sharded' or "
                      f"'elastic', got {kv!r}")
 
@@ -195,7 +201,7 @@ class ServingEngine:
                  moe: Optional[str] = None, moe_experts: int = 64,
                  moe_slots: int = 16, moe_topk: int = 4,
                  moe_prefetch_budget: int = 4, moe_groups: int = 16,
-                 moe_seed: int = 0, tenants=None):
+                 moe_seed: int = 0, tenants=None, max_bits: int = 62):
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -208,7 +214,7 @@ class ServingEngine:
         self.pages: PagedKVCache = make_kv_backend(
             kv, hbm_pages=hbm_pages, page_size=page_size,
             prefetch_budget=prefetch_budget, shards=shards, mesh=mesh,
-            tenants=tenants)
+            tenants=tenants, max_bits=max_bits)
         # MoE expert-weight tier (DESIGN.md §7); router feed is the real
         # model router when the model is a MoE arch, a deterministic
         # synthetic schedule in load-generator mode

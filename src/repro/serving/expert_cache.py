@@ -151,7 +151,7 @@ class ExpertCache:
             # the differential fuzz surfaced
             fresh = all(
                 self.registry.relationship_of_composite(c) is None
-                for c in encode_relationship(sorted(primes)))
+                for c in encode_relationship(primes))
             if fresh:
                 new.append(self.registry.register(primes,
                                                   kind="coactivation"))

@@ -73,21 +73,24 @@ class PagedKVCache:
     """Host-side page manager.  Page ids are globally unique ints."""
 
     def __init__(self, hbm_pages: int = 1024, page_size: int = 16,
-                 prefetch_budget: int = 4):
-        self._init_identity(hbm_pages, page_size, prefetch_budget)
+                 prefetch_budget: int = 4, max_bits: int = 62):
+        self._init_identity(hbm_pages, page_size, prefetch_budget, max_bits)
         self.hbm: "OrderedDict[int, bool]" = OrderedDict()  # page -> prefetched
         self.host: Set[int] = set()
 
     def _init_identity(self, hbm_pages: int, page_size: int,
-                       prefetch_budget: int) -> None:
+                       prefetch_budget: int, max_bits: int = 62) -> None:
         """Page identity, prime assignment, and chain state — shared with
         the array-state implementation (``kv_cache_vec``), which replaces
-        only the *placement* structures above."""
+        only the *placement* structures above.  ``max_bits > 63`` runs the
+        registry in multi-limb wide mode (million-element universes,
+        DESIGN.md §11) — chain edges are pairwise either way, so the
+        placement math is identical at every width."""
         self.page_size = page_size
         self.hbm_capacity = hbm_pages
         self.prefetch_budget = prefetch_budget
         self.factorizer = Factorizer()
-        self.registry = CompositeRegistry(self.factorizer)
+        self.registry = CompositeRegistry(self.factorizer, max_bits=max_bits)
         self.assigner = self._make_assigner()
         self.chains: Dict[int, List[int]] = {}              # request -> pages
         self._content: Dict[int, int] = {}   # content hash -> page id (prefix share)
@@ -166,7 +169,8 @@ class PagedKVCache:
             if pa is not None and pb is not None and pa != pb:
                 fresh = any(
                     self.registry.relationship_of_composite(c) is None
-                    for c in encode_relationship(sorted((pa, pb))))
+                    for c in encode_relationship((pa, pb),
+                                                 self.registry.max_bits))
                 if fresh:
                     self.registry.register({pa, pb}, kind="chain")
                     edges.append((a, b))

@@ -62,11 +62,13 @@ class ShardedPagedKVCache(VectorizedPagedKVCache):
 
     def __init__(self, hbm_pages: int = 1024, page_size: int = 16,
                  prefetch_budget: int = 4, n_shards: int = 2,
-                 mesh="auto", stripes_per_shard: int = 8):
+                 mesh="auto", stripes_per_shard: int = 8,
+                 max_bits: int = 62):
         # discover="host" disables the incremental fast path, so every
         # registry change routes through the (sharded) bulk rebuild
         super().__init__(hbm_pages=hbm_pages, page_size=page_size,
-                         prefetch_budget=prefetch_budget, discover="host")
+                         prefetch_budget=prefetch_budget, discover="host",
+                         max_bits=max_bits)
         self.partition = PrimeSpacePartition(n_shards, stripes_per_shard)
         self.n_shards = self.partition.n_shards
         if mesh == "auto":
@@ -90,13 +92,14 @@ class ShardedPagedKVCache(VectorizedPagedKVCache):
 
     def shard_composites(self) -> Tuple[List[np.ndarray], np.ndarray]:
         """Current registry partition: per-shard-local composite arrays
-        plus the cross-shard array, in global registration order."""
-        arr = self.registry.composites_array()
+        plus the cross-shard array, in global registration order (object
+        dtype when the registry is wide)."""
+        arr = self.registry.composites_view()
         local_pos, cross_pos = self.partition.classify(self.registry)
         return ([arr[np.asarray(pos, dtype=np.int64)]
-                 if pos else np.empty(0, np.int64) for pos in local_pos],
+                 if pos else np.empty(0, arr.dtype) for pos in local_pos],
                 arr[np.asarray(cross_pos, dtype=np.int64)]
-                if cross_pos else np.empty(0, np.int64))
+                if cross_pos else np.empty(0, arr.dtype))
 
     # ------------------------------------------------------------------ #
     # sharded bulk discovery                                              #

@@ -76,13 +76,14 @@ class VectorizedPagedKVCache(PagedKVCache):
     """
 
     def __init__(self, hbm_pages: int = 1024, page_size: int = 16,
-                 prefetch_budget: int = 4, discover: str = "incremental"):
+                 prefetch_budget: int = 4, discover: str = "incremental",
+                 max_bits: int = 62):
         if hbm_pages < 1:
             raise ValueError("hbm_pages must be >= 1")
         if discover not in ("incremental", "host", "kernel"):
             raise ValueError(f"discover must be 'incremental', 'host' or "
                              f"'kernel', got {discover!r}")
-        self._init_identity(hbm_pages, page_size, prefetch_budget)
+        self._init_identity(hbm_pages, page_size, prefetch_budget, max_bits)
         self.discover = discover
         # HBM slot arrays (slot-array layout, DESIGN.md §5.1)
         s = hbm_pages
@@ -174,16 +175,24 @@ class VectorizedPagedKVCache(PagedKVCache):
     def _build_chunks(self, req_id: int) -> np.ndarray:
         primes = [p for pid in self.chains.get(req_id, ())
                   if (p := self.assigner.prime_of(pid)) is not None]
-        chunks = np.asarray(encode_relationship(primes) if primes else [],
-                            dtype=np.int64)
+        enc = encode_relationship(primes, self.registry.max_bits) \
+            if primes else []
+        # wide (multi-limb) chunks exceed int64 — keep exact Python ints
+        # in an object array; the flat/limb kernel split happens at the
+        # gcd call (DESIGN.md §11)
+        dt = object if self.registry.wide else np.int64
+        chunks = np.asarray(enc, dtype=dt)
         self._chain_chunks[req_id] = (chunks, self._assigner_epoch())
         return chunks
+
+    def _chunk_dtype(self):
+        return object if self.registry.wide else np.int64
 
     def _chunks_of(self, req_id: int) -> np.ndarray:
         """Live chunk array for a request — rebuilt when any prime
         release happened since it was cached (see ``_chain_chunks``)."""
         if req_id not in self.chains:
-            return np.empty(0, dtype=np.int64)
+            return np.empty(0, dtype=self._chunk_dtype())
         cached = self._chain_chunks.get(req_id)
         if cached is not None and cached[1] == self._assigner_epoch():
             return cached[0]
@@ -317,14 +326,16 @@ class VectorizedPagedKVCache(PagedKVCache):
 
     def _shared_primes(self, gcds: np.ndarray,
                        pool: np.ndarray) -> Set[int]:
-        """Decode pairwise chunk gcds into the shared prime set."""
-        from repro.kernels.ops import factorize_batch
+        """Decode pairwise chunk gcds into the shared prime set
+        (width-agnostic: exact dispatch picks flat vs limb kernels)."""
+        from repro.kernels.ops import factorize_batch_exact
 
-        gs = np.unique(gcds[gcds > 1])
-        if gs.size == 0:
+        gs = sorted({int(g) for g in gcds if int(g) > 1})
+        if not gs:
             return set()
-        facs, residual = factorize_batch(gs, pool)
-        assert np.all(residual == 1), "chunk gcd escaped the chain pool"
+        facs, residual = factorize_batch_exact(gs, pool)
+        assert all(int(r) == 1 for r in residual), \
+            "chunk gcd escaped the chain pool"
         return {q for fs in facs for q in fs}
 
     def shared_prefix(self, req_a: int, req_b: int) -> List[int]:
@@ -336,31 +347,41 @@ class VectorizedPagedKVCache(PagedKVCache):
 
     def shared_prefix_bulk(self, pairs: Sequence[Tuple[int, int]]
                            ) -> Dict[Tuple[int, int], List[int]]:
-        """Shared pages for many request pairs through ONE ``gcd_batch``
-        call (all chunk cross-products concatenated)."""
-        from repro.kernels.ops import gcd_batch
+        """Shared pages for many request pairs through ONE batched gcd
+        call (all chunk cross-products concatenated).  Wide registries
+        route through the multi-limb gcd kernel with the union of the
+        side-a chain primes as the reconstruction pool (common primes of
+        any pair are a subset of that side's chain — DESIGN.md §11)."""
+        from repro.kernels.ops import gcd_batch, gcd_batch_limbs
 
+        dt = self._chunk_dtype()
         blocks: List[Tuple[Tuple[int, int], np.ndarray, np.ndarray]] = []
+        pools: List[List[int]] = []
         for ra, rb in pairs:
             ca, cb = self._chunks_of(ra), self._chunks_of(rb)
             blocks.append(((ra, rb), np.repeat(ca, cb.size),
                            np.tile(cb, ca.size)))
+            pools.append([p for pid in self.chains.get(ra, [])
+                          if (p := self.assigner.prime_of(pid)) is not None])
         flat_a = np.concatenate([a for _, a, _ in blocks]) if blocks \
-            else np.empty(0, dtype=np.int64)
+            else np.empty(0, dtype=dt)
         flat_b = np.concatenate([b for _, _, b in blocks]) if blocks \
-            else np.empty(0, dtype=np.int64)
-        gcds = gcd_batch(flat_a, flat_b) if flat_a.size \
-            else np.empty(0, dtype=np.int64)
+            else np.empty(0, dtype=dt)
+        if not flat_a.size:
+            gcds = np.empty(0, dtype=dt)
+        elif self.registry.wide:
+            union_pool = sorted({q for pl in pools for q in pl})
+            gcds = np.asarray(
+                gcd_batch_limbs(flat_a, flat_b, union_pool), dtype=object)
+        else:
+            gcds = gcd_batch(flat_a, flat_b)
         out: Dict[Tuple[int, int], List[int]] = {}
         lo = 0
-        for (ra, rb), aa, _ in blocks:
+        for ((ra, rb), aa, _), pool in zip(blocks, pools):
             g = gcds[lo:lo + aa.size]
             lo += aa.size
-            pool = np.asarray(
-                [p for pid in self.chains.get(ra, [])
-                 if (p := self.assigner.prime_of(pid)) is not None],
-                dtype=np.int64)
-            shared = self._shared_primes(g, pool) if g.size else set()
+            shared = self._shared_primes(
+                g, np.asarray(pool, dtype=np.int64)) if g.size else set()
             out[(ra, rb)] = sorted(
                 pid for q in shared
                 if (pid := self.assigner.data_of(int(q))) is not None)

@@ -171,7 +171,8 @@ class _SlotFrontEnd:
                  mesh="auto", moe: Optional[str] = None,
                  moe_experts: int = 64, moe_slots: int = 16,
                  moe_topk: int = 4, moe_prefetch_budget: int = 4,
-                 moe_groups: int = 16, moe_seed: int = 0, tenants=None):
+                 moe_groups: int = 16, moe_seed: int = 0, tenants=None,
+                 max_bits: int = 62):
         if policy not in self.policy_choices:
             raise ValueError(f"policy must be one of "
                              f"{self.policy_choices}, got {policy!r}")
@@ -187,7 +188,7 @@ class _SlotFrontEnd:
         self.pages = make_kv_backend(
             kv, hbm_pages=hbm_pages, page_size=page_size,
             prefetch_budget=prefetch_budget, shards=shards, mesh=mesh,
-            tenants=tenants)
+            tenants=tenants, max_bits=max_bits)
         self.experts = make_expert_backend(
             moe, moe_experts=moe_experts, moe_slots=moe_slots,
             moe_prefetch_budget=moe_prefetch_budget, tenants=tenants)

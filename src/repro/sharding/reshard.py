@@ -152,7 +152,7 @@ class ShardSlices:
         """
         if self.version == registry.version:
             return "noop"
-        arr = registry.composites_array()
+        arr = registry.composites_view()
         n_old = self._values.size
         if (arr.size >= n_old and n_old
                 and np.array_equal(arr[:n_old], self._values)):
@@ -220,9 +220,9 @@ class ShardSlices:
         LOST positions are (mode ``"partial"``).  Returns
         ``(n_refactorized, mode)``.
         """
-        from repro.kernels.ops import factorize_batch
+        from repro.kernels.ops import factorize_batch_exact
 
-        arr = registry.composites_array()
+        arr = registry.composites_view()
         stale = (self.version != registry.version
                  or arr.size != self._values.size
                  or not np.array_equal(arr, self._values))
@@ -236,8 +236,8 @@ class ShardSlices:
         lost = np.nonzero(self._owner == LOST)[0]
         if lost.size:
             pool = registry.primes_array()
-            facs, residual = factorize_batch(arr[lost], pool)
-            assert bool(np.all(residual == 1)), \
+            facs, residual = factorize_batch_exact(arr[lost], pool)
+            assert all(int(r) == 1 for r in residual), \
                 "surviving composite escaped the prime pool (Theorem 1)"
             for pos, fs in zip(lost, facs):
                 self._primes[int(pos)] = tuple(sorted(int(q) for q in fs))

@@ -187,7 +187,7 @@ class TenantNamespace:
         against 1 — the coprimality statement of the theorem verified
         literally (quadratic; meant for tests and smoke benchmarks).
         """
-        arr = registry.composites_array()
+        arr = registry.composites_view()
         rep = IsolationReport(per_tenant=[0] * self.n_tenants,
                               n_relationships=len(registry),
                               n_composites=int(arr.size))

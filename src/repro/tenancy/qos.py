@@ -277,10 +277,11 @@ class TenantedPagedKVCache(_TenantedKVBase, PagedKVCache):
 
     def __init__(self, hbm_pages: int = 1024, page_size: int = 16,
                  prefetch_budget: int = 4, qos: Union[int, TenantQoSConfig] = 2,
-                 namespace: Optional[TenantNamespace] = None):
+                 namespace: Optional[TenantNamespace] = None,
+                 max_bits: int = 62):
         self._setup_tenancy(qos, namespace, hbm_pages, prefetch_budget)
         super().__init__(hbm_pages=hbm_pages, page_size=page_size,
-                         prefetch_budget=prefetch_budget)
+                         prefetch_budget=prefetch_budget, max_bits=max_bits)
 
     def _insert_hbm(self, pid: int, prefetched: bool) -> None:
         t = self.tenant_of_page(pid)
@@ -364,10 +365,12 @@ class TenantedVectorizedPagedKVCache(_TenantedVecPlacement,
     def __init__(self, hbm_pages: int = 1024, page_size: int = 16,
                  prefetch_budget: int = 4, discover: str = "incremental",
                  qos: Union[int, TenantQoSConfig] = 2,
-                 namespace: Optional[TenantNamespace] = None):
+                 namespace: Optional[TenantNamespace] = None,
+                 max_bits: int = 62):
         self._setup_tenancy(qos, namespace, hbm_pages, prefetch_budget)
         super().__init__(hbm_pages=hbm_pages, page_size=page_size,
-                         prefetch_budget=prefetch_budget, discover=discover)
+                         prefetch_budget=prefetch_budget, discover=discover,
+                         max_bits=max_bits)
         self._init_slot_tenant()
 
 
@@ -384,11 +387,13 @@ class TenantedShardedPagedKVCache(_TenantedVecPlacement,
                  prefetch_budget: int = 4, n_shards: int = 2,
                  mesh="auto", stripes_per_shard: int = 8,
                  qos: Union[int, TenantQoSConfig] = 2,
-                 namespace: Optional[TenantNamespace] = None):
+                 namespace: Optional[TenantNamespace] = None,
+                 max_bits: int = 62):
         self._setup_tenancy(qos, namespace, hbm_pages, prefetch_budget)
         super().__init__(hbm_pages=hbm_pages, page_size=page_size,
                          prefetch_budget=prefetch_budget, n_shards=n_shards,
-                         mesh=mesh, stripes_per_shard=stripes_per_shard)
+                         mesh=mesh, stripes_per_shard=stripes_per_shard,
+                         max_bits=max_bits)
         self._init_slot_tenant()
 
 
@@ -407,11 +412,13 @@ class TenantedElasticShardedPagedKVCache(_TenantedVecPlacement,
                  prefetch_budget: int = 4, n_shards: int = 2,
                  mesh="auto", stripes_per_shard: int = 8,
                  qos: Union[int, TenantQoSConfig] = 2,
-                 namespace: Optional[TenantNamespace] = None):
+                 namespace: Optional[TenantNamespace] = None,
+                 max_bits: int = 62):
         self._setup_tenancy(qos, namespace, hbm_pages, prefetch_budget)
         super().__init__(hbm_pages=hbm_pages, page_size=page_size,
                          prefetch_budget=prefetch_budget, n_shards=n_shards,
-                         mesh=mesh, stripes_per_shard=stripes_per_shard)
+                         mesh=mesh, stripes_per_shard=stripes_per_shard,
+                         max_bits=max_bits)
         self._init_slot_tenant()
 
 

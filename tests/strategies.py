@@ -44,6 +44,7 @@ __all__ = [
     "KVWorkloadSpec", "build_kv_ops", "apply_kv_ops", "drive_kv",
     "kv_workload_specs", "trace_zoo", "trace_specs", "make_trace",
     "adversarial_trace", "adversarial_stream_specs",
+    "LimbUniverseSpec", "build_limb_universe", "limb_universe_specs",
     "ElasticEventSpec", "build_failure_schedule", "apply_elastic_event",
     "elastic_event_specs",
     "ExpertWorkloadSpec", "build_expert_sets", "drive_expert",
@@ -658,6 +659,72 @@ def expert_workload_specs():
         disjoint=st.booleans(),
         repeat_hot=st.booleans(),
         oversize_every=st.sampled_from([0, 3]),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# multi-limb composite universes (wide-registry tier, DESIGN.md §11)          #
+# --------------------------------------------------------------------------- #
+
+@dataclass(frozen=True)
+class LimbUniverseSpec:
+    """Compact description of a squarefree-composite universe over a
+    prime pool; expanded by :func:`build_limb_universe` into concrete
+    exact Python ints — the limb-kernel differential fuzz's input
+    (tests/test_limbs.py)."""
+
+    seed: int = 0
+    n_pool: int = 64               # prime pool size
+    n_composites: int = 24
+    max_factors: int = 20          # factors per composite (chain depth)
+    max_bits: int = 256            # registry chunk width under test
+    big_primes: bool = True        # draw near the 31-bit kernel limb cap
+
+
+def build_limb_universe(spec: LimbUniverseSpec):
+    """Expand a spec into ``(pool, composites)``: a sorted prime pool
+    and squarefree products of pool subsets, every product strictly
+    under ``2**spec.max_bits``.  All values are exact Python ints — the
+    oracle side of the differential fuzz; the kernel side packs them
+    with :func:`repro.core.composite.pack_limbs`."""
+    from repro.core.primes import segmented_sieve, sieve_primes
+
+    rng = np.random.default_rng(spec.seed)
+    small = [int(p) for p in sieve_primes(10_000)[5:]]
+    pool = set(small[: spec.n_pool])
+    if spec.big_primes:
+        # the top of the kernel limb word (primes < 2**31, DESIGN.md §11)
+        lo = (1 << 31) - 20_000
+        pool |= {int(p) for p in segmented_sieve(lo, 1 << 31)}
+        pool |= {1_000_003, 999_983, 104_729, 15_485_863}
+    pool = sorted(pool)
+    comps = []
+    for _ in range(spec.n_composites):
+        k = int(rng.integers(1, spec.max_factors + 1))
+        ps = rng.choice(len(pool), size=min(k, len(pool)), replace=False)
+        c = 1
+        for i in ps:
+            nxt = c * pool[int(i)]
+            if nxt.bit_length() >= spec.max_bits:
+                break
+            c = nxt
+        if c > 1:
+            comps.append(c)
+    return pool, (comps or [pool[0] * pool[1]])
+
+
+def limb_universe_specs():
+    """Strategy over limb-universe specs, biased toward the edges the
+    limb kernels care about: single-limb vs many-limb widths, chains
+    deep enough to span limbs, primes adjacent to the 31-bit cap."""
+    return st.builds(
+        LimbUniverseSpec,
+        seed=st.integers(min_value=0, max_value=2**16),
+        n_pool=st.sampled_from([8, 64, 200]),
+        n_composites=st.integers(min_value=1, max_value=32),
+        max_factors=st.sampled_from([2, 8, 40]),
+        max_bits=st.sampled_from([64, 96, 256, 1024]),
+        big_primes=st.booleans(),
     )
 
 

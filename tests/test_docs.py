@@ -23,3 +23,16 @@ def test_doc_tree_exists():
 def test_all_doc_references_resolve():
     problems = check_doc_refs.check(ROOT)
     assert not problems, "\n".join(problems)
+
+
+def test_api_md_large_universe_examples_execute():
+    """The docs/api.md "Large universes" section promises *executed*
+    examples (ISSUE 8): every ```python block in it must run clean."""
+    import re
+    text = (ROOT / "docs" / "api.md").read_text()
+    start = text.index("## Large universes")
+    end = text.index("## Results containers")
+    blocks = re.findall(r"```python\n(.*?)```", text[start:end], re.S)
+    assert blocks, "Large universes section lost its examples"
+    for i, block in enumerate(blocks):
+        exec(compile(block, f"<api.md large-universes {i}>", "exec"), {})

@@ -204,11 +204,108 @@ def test_composite_overflow_is_detected_never_silent():
     # divisibility scan still finds the chain through any member
     assert reg.related_primes(primes[0]) == set(primes) - {primes[0]}
 
-    # (3) a chunk budget that can exceed int64 is a construction error
-    for bad in (64, 70, 1, 0, -5):
+    # (3) degenerate chunk budgets are construction errors; widths past
+    # one int64 word — which PR 6 rejected outright — now construct a
+    # multi-limb wide registry ("represent, never raise", DESIGN.md §11)
+    for bad in (1, 0, -5, 4097):
         with pytest.raises(ValueError):
             CompositeRegistry(max_bits=bad)
     assert CompositeRegistry(max_bits=63).max_bits == 63   # boundary ok
+    for wide_bits in (64, 70, 1024):       # formerly ValueError traces
+        wr = CompositeRegistry(max_bits=wide_bits)
+        assert wr.wide
+        rel_w = wr.register(primes)        # the same ~2**800 deep chain
+        assert len(rel_w.composites) <= len(rel.composites)
+        prod_w = 1
+        for c in rel_w.composites:
+            assert 1 < c < 2**wide_bits
+            prod_w *= c
+        assert prod_w == expect            # bit-exact at every width
+        members_w = set()
+        for c in rel_w.composites:
+            # a wide chunk can be hundreds of bits — give the Pollard
+            # tail a real budget instead of the 50ms per-access default
+            members_w |= set(wr.factorizer.distinct_factors(
+                int(c), time_budget_s=10.0))
+        assert members_w == set(primes)
+        with pytest.raises(OverflowError):
+            wr.composites_array()          # int64 view refuses to wrap
+    # a 1024-bit budget holds the whole chain in ONE exact chunk
+    assert len(CompositeRegistry(max_bits=1024).register(primes)
+               .composites) == 1
+
+
+def test_encode_relationship_budget_boundary_edges():
+    """ISSUE 8 satellite: the chunk boundary is inclusive on the value
+    side, exclusive on the budget — a chunk product of exactly
+    ``2**max_bits - 1`` is accepted, a member of exactly ``2**max_bits``
+    is rejected with the existing message."""
+    # 2**11 - 1 = 2047 = 23 * 89: the product lands EXACTLY on the
+    # largest representable value and must stay one chunk
+    assert encode_relationship([89, 23], max_bits=11) == [2047]
+    # a Mersenne prime IS the largest representable value: accepted
+    assert encode_relationship([8191], max_bits=13) == [8191]
+    # one past the edge: 2**max_bits itself is rejected, with the same
+    # message the PR 6 guard established
+    with pytest.raises(ValueError,
+                       match=r"exceeds 11-bit composite budget"):
+        encode_relationship([2048], max_bits=11)
+    with pytest.raises(ValueError,
+                       match=r"exceeds 62-bit composite budget"):
+        encode_relationship([1 << 62], max_bits=62)
+    # product one past the edge splits instead of overflowing:
+    # 3 * 683 = 2049 = 2**11 + 1
+    assert encode_relationship([3, 683], max_bits=11) == [3, 683]
+
+
+@given(st.lists(st.sampled_from([2, 3, 5, 7, 11, 13, 10007, 10009,
+                                 1_000_003, 1_000_033]),
+                min_size=1, max_size=12),
+       st.randoms(use_true_random=False))
+@settings(max_examples=150, deadline=None)
+def test_encode_relationship_canonical_for_multisets(ms, rnd):
+    """ISSUE 8 satellite: chunking is canonical in ONE place — the same
+    multiset (duplicates included) produces the same chunk tuple
+    regardless of caller order, at narrow and wide widths."""
+    shuffled = list(ms)
+    rnd.shuffle(shuffled)
+    for mb in (62, 128):
+        a = encode_relationship(ms, max_bits=mb)
+        b = encode_relationship(shuffled, max_bits=mb)
+        assert a == b
+        prod = 1
+        for c in a:
+            prod *= c
+        expect = 1
+        for p in ms:
+            expect *= p
+        assert prod == expect              # duplicates all survive
+
+
+def test_encode_relationship_canonical_deterministic():
+    """Hypothesis-free pin of the canonical-chunking property (the
+    tier-1 suite runs without dev deps): shuffled duplicate-prime
+    multisets produce identical chunk tuples."""
+    import random
+    ms = [1_000_003, 2, 1_000_003, 999_983, 7, 7, 10007, 1_000_033,
+          999_983, 3]
+    rnd = random.Random(8)
+    for mb in (62, 96, 1024):
+        want = encode_relationship(ms, max_bits=mb)
+        for _ in range(25):
+            shuffled = list(ms)
+            rnd.shuffle(shuffled)
+            assert encode_relationship(shuffled, max_bits=mb) == want
+
+
+def test_register_chunks_match_canonical_encoding():
+    """``CompositeRegistry.register`` must not re-sort: its chunk tuple
+    is exactly ``encode_relationship`` of the prime SET."""
+    for mb in (62, 128):
+        reg = CompositeRegistry(max_bits=mb)
+        ps = {1_000_037, 11, 999_983, 10007}
+        rel = reg.register(ps)
+        assert list(rel.composites) == encode_relationship(ps, mb)
 
 
 def test_drop_prime_purges_relationships():
