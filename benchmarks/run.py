@@ -54,6 +54,7 @@ def main(argv=None) -> None:
         cases.case_tenancy(smoke=True)
         cases.case_batching(smoke=True)
         cases.case_scale(smoke=True)
+        cases.case_dedup(smoke=True)
         print(f"\ntotal benchmark wall time: {time.time() - t0:.1f}s")
         return
 
@@ -69,6 +70,7 @@ def main(argv=None) -> None:
     cases.case_tenancy()
     cases.case_batching()
     cases.case_scale()
+    cases.case_dedup()
     kernel_bench.run()
 
     if not args.skip_roofline:

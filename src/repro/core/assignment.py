@@ -20,7 +20,7 @@ from __future__ import annotations
 import itertools
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, Hashable, List, Optional, Tuple
+from typing import Dict, Hashable, List, Optional, Sequence, Tuple
 
 from .composite import CompositeRegistry
 from .primes import CacheLevel, HierarchicalPrimeAllocator
@@ -171,6 +171,56 @@ class PrimeAssigner:
         self._prime_to_data[level][p] = d
         self.stats.assigned += 1
         return p
+
+    def assign_many(self, ds: Sequence[DataID], level: int) -> List[int]:
+        """Batched :meth:`assign`, bit-identical to the per-element loop.
+
+        Runs of *fresh, cold* elements (no prime at any level, zero
+        predicted frequency — for those ``_select_range`` provably
+        returns ``level`` and :meth:`assign` reduces to a pure pool
+        allocation) are allocated in one :meth:`PrimePool.allocate_many`
+        slice and bulk-inserted into the bidirectional maps.  Anything
+        else — cached primes, warm elements, duplicates within the batch
+        — flushes the pending run and falls back to scalar :meth:`assign`
+        at its original position, so allocation order (and therefore
+        every prime handed out) matches the scalar loop exactly.  This
+        is the streamed-build fast path for million-element registries.
+        """
+        out: List[int] = []
+        run: List[DataID] = []
+        run_set: set = set()
+        pool = self.allocator.pools[level]
+
+        def flush() -> None:
+            if not run:
+                return
+            ps = pool.allocate_many(len(run))
+            d2p = self._data_to_prime[level]
+            p2d = self._prime_to_data[level]
+            for d, p in zip(run, ps):
+                d2p[d] = p
+                p2d[p] = d
+            self.stats.assigned += len(ps)
+            out.extend(ps)
+            if len(ps) < len(run):
+                # bounded pool ran dry mid-run: the scalar path would
+                # spill the remainder level by level — defer to it
+                for d in run[len(ps):]:
+                    out.append(self.assign(d, level))
+            run.clear()
+            run_set.clear()
+
+        for d in ds:
+            if (d not in run_set
+                    and self.tracker.predicted_frequency(d) == 0.0
+                    and self.prime_of(d) is None):
+                run.append(d)
+                run_set.add(d)
+            else:
+                flush()
+                out.append(self.assign(d, level))
+        flush()
+        return out
 
     def release(self, d: DataID, level: int) -> None:
         """Return d's prime at `level` to its pool and purge composites."""

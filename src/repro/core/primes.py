@@ -228,6 +228,36 @@ class PrimePool:
         self._allocated.add(p)
         return p
 
+    def allocate_many(self, n: int) -> List[int]:
+        """Batched :meth:`allocate`: the primes that ``n`` successive
+        ``allocate()`` calls would return, in the same order (bounded
+        pools return fewer when dry), with the same final allocation
+        state.  The free-list is consumed smallest-first exactly as the
+        scalar path does, then fresh primes come off the ascending
+        cursor in one slice — this is the streamed-build fast path for
+        million-element registries (``benchmarks.cases.case_scale``).
+        """
+        if n <= 0:
+            return []
+        out: List[int] = []
+        if self._free:
+            take = sorted(self._free)[:n]
+            if len(take) == len(self._free):
+                self._free.clear()
+            else:
+                for p in take:
+                    self._free.remove(p)
+            out.extend(take)
+        want = n - len(out)
+        if want > 0:
+            if self.hi is None and len(self._primes) - self._next_idx < want:
+                self._extend(want - (len(self._primes) - self._next_idx))
+            fresh = self._primes[self._next_idx : self._next_idx + want]
+            self._next_idx += len(fresh)
+            out.extend(fresh)
+        self._allocated.update(out)
+        return out
+
     def free(self, p: int) -> None:
         """Return ``p`` to the free-list.  Double-frees and *foreign*
         primes (out of this pool's value range, or never allocated from
@@ -259,6 +289,9 @@ class HierarchicalPrimeAllocator:
 
     def allocate(self, level: int) -> Optional[int]:
         return self.pools[level].allocate()
+
+    def allocate_many(self, level: int, n: int) -> List[int]:
+        return self.pools[level].allocate_many(n)
 
     def free(self, level: int, p: int) -> None:
         """Free ``p``, routed to the pool whose range actually contains

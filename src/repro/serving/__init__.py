@@ -41,6 +41,9 @@ The vectorized and sharded caches must reproduce the oracle's
 discipline of ``tests/test_engine.py``.
 """
 
+from .dedup import (DEDUP_COUNTERS, DedupElasticShardedPagedKVCache,
+                    DedupOracle, DedupShardedPagedKVCache,
+                    DedupVectorizedPagedKVCache)
 from .elastic import (ElasticController, ElasticShardedPagedKVCache,
                       RecoveryReport)
 from .engine import Request, ServingEngine
@@ -60,4 +63,6 @@ __all__ = [
     "ShardedPagedKVCache", "VectorizedPagedKVCache",
     "ElasticShardedPagedKVCache", "ElasticController", "RecoveryReport",
     "SlotMachine", "SlotOracle", "SlotRequest", "poisson_arrival_ticks",
+    "DEDUP_COUNTERS", "DedupOracle", "DedupVectorizedPagedKVCache",
+    "DedupShardedPagedKVCache", "DedupElasticShardedPagedKVCache",
 ]

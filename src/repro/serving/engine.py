@@ -80,7 +80,8 @@ _STUB_VOCAB = 32_000
 
 def make_kv_backend(kv: str, *, hbm_pages: int, page_size: int,
                     prefetch_budget: int, shards: int = 2, mesh="auto",
-                    tenants=None, max_bits: int = 62) -> PagedKVCache:
+                    tenants=None, max_bits: int = 62,
+                    dedup: bool = False) -> PagedKVCache:
     """Construct a paged-KV cache backend by name — the single backend
     registry every engine front-end shares (``ServingEngine`` and the
     continuous-batching :class:`~repro.serving.slots.SlotMachine`).
@@ -88,9 +89,38 @@ def make_kv_backend(kv: str, *, hbm_pages: int, page_size: int,
     ``kv`` is one of ``"vec" | "scalar" | "sharded" | "elastic"``;
     ``tenants`` (an int or a :class:`~repro.tenancy.TenantQoSConfig`)
     selects the tenant-namespaced variant of the same backend
-    (DESIGN.md §8).  ``max_bits > 63`` runs the registry in multi-limb
+    (DESIGN.md §8), and ``dedup=True`` (tenants mode only) the
+    copy-on-write shared-prefix dedup variant on top of it
+    (DESIGN.md §12).  ``max_bits > 63`` runs the registry in multi-limb
     wide mode (DESIGN.md §11) — every backend composes unchanged."""
-    if tenants is not None:
+    if dedup:
+        if tenants is None:
+            raise ValueError("dedup=True needs tenants= mode (the shared "
+                             "namespace is a tenant-namespace extension)")
+        from repro.serving.dedup import (
+            DedupElasticShardedPagedKVCache, DedupOracle,
+            DedupShardedPagedKVCache, DedupVectorizedPagedKVCache)
+        if kv == "vec":
+            return DedupVectorizedPagedKVCache(
+                hbm_pages=hbm_pages, page_size=page_size,
+                prefetch_budget=prefetch_budget, qos=tenants,
+                max_bits=max_bits)
+        if kv == "scalar":
+            return DedupOracle(
+                hbm_pages=hbm_pages, page_size=page_size,
+                prefetch_budget=prefetch_budget, qos=tenants,
+                max_bits=max_bits)
+        if kv == "sharded":
+            return DedupShardedPagedKVCache(
+                hbm_pages=hbm_pages, page_size=page_size,
+                prefetch_budget=prefetch_budget, n_shards=shards,
+                mesh=mesh, qos=tenants, max_bits=max_bits)
+        if kv == "elastic":
+            return DedupElasticShardedPagedKVCache(
+                hbm_pages=hbm_pages, page_size=page_size,
+                prefetch_budget=prefetch_budget, n_shards=shards,
+                mesh=mesh, qos=tenants, max_bits=max_bits)
+    elif tenants is not None:
         from repro.tenancy.qos import (
             TenantedElasticShardedPagedKVCache, TenantedPagedKVCache,
             TenantedShardedPagedKVCache, TenantedVectorizedPagedKVCache)
@@ -201,7 +231,8 @@ class ServingEngine:
                  moe: Optional[str] = None, moe_experts: int = 64,
                  moe_slots: int = 16, moe_topk: int = 4,
                  moe_prefetch_budget: int = 4, moe_groups: int = 16,
-                 moe_seed: int = 0, tenants=None, max_bits: int = 62):
+                 moe_seed: int = 0, tenants=None, max_bits: int = 62,
+                 dedup: bool = False):
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -211,10 +242,14 @@ class ServingEngine:
         # a tenant id and the cache enforces per-tenant quotas with
         # per-tenant PageStats / prefetch logs
         self.tenants = tenants
+        # dedup=True (tenants mode): cross-tenant COW shared-prefix
+        # dedup — register_request runs the admission dedup probe
+        # before any prefill work (DESIGN.md §12)
+        self.dedup = bool(dedup)
         self.pages: PagedKVCache = make_kv_backend(
             kv, hbm_pages=hbm_pages, page_size=page_size,
             prefetch_budget=prefetch_budget, shards=shards, mesh=mesh,
-            tenants=tenants, max_bits=max_bits)
+            tenants=tenants, max_bits=max_bits, dedup=dedup)
         # MoE expert-weight tier (DESIGN.md §7); router feed is the real
         # model router when the model is a MoE arch, a deterministic
         # synthetic schedule in load-generator mode

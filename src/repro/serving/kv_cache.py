@@ -54,6 +54,12 @@ class PageStats:
     evictions: int = 0
     shared_prefix_pages: int = 0
     registry_scans: int = 0     # per-page §4.2 divisibility scans performed
+    # cross-tenant dedup counters (repro.serving.dedup; zero elsewhere —
+    # kept OUT of PARITY_COUNTERS so per-tenant stats still sum to the
+    # global parity tuple; the dedup fuzz pins them via DEDUP_COUNTERS)
+    dedup_hits: int = 0         # admission reused a shared-namespace page
+    dedup_promotions: int = 0   # private page content re-seen cross-tenant
+    cow_copies: int = 0         # chains that diverged off a shared prefix
 
     @property
     def hbm_hit_rate(self) -> float:
@@ -93,7 +99,7 @@ class PagedKVCache:
         self.registry = CompositeRegistry(self.factorizer, max_bits=max_bits)
         self.assigner = self._make_assigner()
         self.chains: Dict[int, List[int]] = {}              # request -> pages
-        self._content: Dict[int, int] = {}   # content hash -> page id (prefix share)
+        self._content: Dict[Tuple, int] = {}  # content key -> page id (prefix share)
         self._next_page = 0
         self.stats = PageStats()
         #: every (source page, prefetched page) pair ever issued, in
@@ -113,14 +119,21 @@ class PagedKVCache:
     # ------------------------------------------------------------------ #
 
     def _page_for_tokens(self, token_block: Tuple[int, ...]) -> Tuple[int, bool]:
-        """Content-addressed page id: identical prefixes share pages."""
-        h = hash(self._content_key(token_block))
-        if h in self._content:
+        """Content-addressed page id: identical prefixes share pages.
+
+        The map is keyed on the FULL content key, not ``hash(key)``: a
+        64-bit hash collision would silently alias two distinct token
+        blocks to one page — a statistical false positive of exactly the
+        kind Theorem 1 forbids (dict lookup already compares keys on
+        hash collision, so equality here is exact)."""
+        key = self._content_key(token_block)
+        pid = self._content.get(key)
+        if pid is not None:
             self.stats.shared_prefix_pages += 1
-            return self._content[h], True
+            return pid, True
         pid = self._next_page
         self._next_page += 1
-        self._content[h] = pid
+        self._content[key] = pid
         self._assign_page(pid)
         return pid, False
 
@@ -225,6 +238,20 @@ class PagedKVCache:
         point."""
         return [self.touch(r, i) for r, i in items]
 
+    def _prefetch_allowed(self, src: int, tgt: int) -> bool:
+        """Prefetch admission filter (hook).  The dedup cache restricts
+        prefetch targets to the requester's tenant + the shared
+        namespace; a filtered candidate is skipped WITHOUT consuming
+        budget, so both twins walk the same candidate order."""
+        return True
+
+    def _can_insert(self, pid: int) -> bool:
+        """Insertability filter (hook).  The dedup cache reports a page
+        un-insertable when its shared-namespace quota is pinned full by
+        referenced pages; such candidates are skipped without consuming
+        prefetch budget."""
+        return True
+
     def _prefetch_successors(self, pid: int) -> None:
         """§4.2 scan: chains through pid -> prefetch successor pages."""
         p = self.assigner.prime_of(pid)
@@ -241,6 +268,9 @@ class PagedKVCache:
                 succ = self.assigner.data_of(q)
                 if succ is None or succ in self.hbm:
                     continue
+                if not (self._prefetch_allowed(pid, succ)
+                        and self._can_insert(succ)):
+                    continue
                 self._insert_hbm(succ, True)
                 self.stats.prefetches += 1
                 self.prefetch_log.append((pid, succ))
@@ -254,19 +284,31 @@ class PagedKVCache:
 
     def shared_prefix(self, req_a: int, req_b: int) -> List[int]:
         """Pages shared by two requests, recovered via gcd of the chain
-        composites (exact — unique factorization)."""
+        composites (exact — unique factorization).
+
+        The gcd is exact Python-int arithmetic at ANY registry width;
+        the factors are recovered by trial division against request a's
+        own chain primes rather than a general factorization of ``g`` —
+        a wide-mode (``max_bits > 63``) chain composite can exceed
+        anything the budgeted :meth:`Factorizer.factorize` path fully
+        factors, whereas dividing out a known pool is exact and
+        width-agnostic (the same pool-reconstruction the vectorized
+        ``gcd_batch_exact`` path uses)."""
         import math
         ca = self._chain_composite(req_a)
         cb = self._chain_composite(req_b)
         g = math.gcd(ca, cb)
         if g <= 1:
             return []
-        shared_primes = self.factorizer.distinct_factors(g)
         out = []
-        for q in shared_primes:
-            pid = self.assigner.data_of(q)
-            if pid is not None:
+        residual = g
+        for pid in self.chains.get(req_a, []):
+            p = self.assigner.prime_of(pid)
+            if p and residual % p == 0:
+                residual //= p
                 out.append(pid)
+        assert residual == 1, "gcd of chain composites must factor " \
+            "entirely over the chain's own primes (Theorem 1)"
         return sorted(out)
 
     def _chain_composite(self, req_id: int) -> int:

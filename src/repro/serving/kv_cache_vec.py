@@ -301,6 +301,9 @@ class VectorizedPagedKVCache(PagedKVCache):
             succ = int(succ)
             if self.slot_of[succ] >= 0:           # already HBM-resident
                 continue
+            if not (self._prefetch_allowed(pid, succ)
+                    and self._can_insert(succ)):  # dedup hooks (base: True)
+                continue
             self._insert(succ, True)
             self.stats.prefetches += 1
             self.prefetch_log.append((pid, succ))

@@ -172,7 +172,7 @@ class _SlotFrontEnd:
                  moe_experts: int = 64, moe_slots: int = 16,
                  moe_topk: int = 4, moe_prefetch_budget: int = 4,
                  moe_groups: int = 16, moe_seed: int = 0, tenants=None,
-                 max_bits: int = 62):
+                 max_bits: int = 62, dedup: bool = False):
         if policy not in self.policy_choices:
             raise ValueError(f"policy must be one of "
                              f"{self.policy_choices}, got {policy!r}")
@@ -185,10 +185,15 @@ class _SlotFrontEnd:
         self.prefill_tokens = max(1, int(prefill_tokens))
         self.reread_window = max(1, int(reread_window))
         self.tenants = tenants
+        # dedup=True (tenants mode): shared-prefix pages discovered at
+        # admission are already-computed read-only content, so their
+        # prefill is skipped — identically in the machine and the
+        # oracle (DESIGN.md §12)
+        self.dedup = bool(dedup)
         self.pages = make_kv_backend(
             kv, hbm_pages=hbm_pages, page_size=page_size,
             prefetch_budget=prefetch_budget, shards=shards, mesh=mesh,
-            tenants=tenants, max_bits=max_bits)
+            tenants=tenants, max_bits=max_bits, dedup=dedup)
         self.experts = make_expert_backend(
             moe, moe_experts=moe_experts, moe_slots=moe_slots,
             moe_prefetch_budget=moe_prefetch_budget, tenants=tenants)
@@ -399,6 +404,14 @@ class SlotMachine(_SlotFrontEnd):
                             req.req_id, req.prompt, tenant=req.tenant)
                     else:
                         self.pages.register_request(req.req_id, req.prompt)
+                    if self.dedup and req.prefill_done == 0:
+                        # admission dedup: the leading shared-prefix run
+                        # is already-computed read-only content — skip
+                        # its prefill (the TTFT win case_dedup measures)
+                        skip = self.pages.dedup_prefix.get(req.req_id, 0) \
+                            * self.page_size
+                        req.prefill_done = min(req.n_prompt, skip)
+                        self.prefill_done[i] = req.prefill_done
                 L = len(self.pages.chains[req.req_id])
                 self.chain_len[i] = L
                 if req.prefill_done >= req.n_prompt:
@@ -559,6 +572,12 @@ class SlotOracle(_SlotFrontEnd):
                             req.req_id, req.prompt, tenant=req.tenant)
                     else:
                         self.pages.register_request(req.req_id, req.prompt)
+                    if self.dedup and req.prefill_done == 0:
+                        # admission dedup prefill skip — must mirror the
+                        # machine exactly (parity contract)
+                        skip = self.pages.dedup_prefix.get(req.req_id, 0) \
+                            * self.page_size
+                        req.prefill_done = min(req.n_prompt, skip)
                 L = len(self.pages.chains[req.req_id])
                 if req.prefill_done >= req.n_prompt:
                     req.state = "decode"

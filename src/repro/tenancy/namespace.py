@@ -108,6 +108,11 @@ class IsolationReport:
         default_factory=list)
     #: cross-tenant composite pairs gcd-verified coprime (pairwise mode)
     coprime_pairs_checked: int = 0
+    #: composites touching the shared dedup namespace (``shared=True``
+    #: namespaces only): wholly-shared chain edges plus mixed
+    #: shared↔private COW-boundary edges — legal by construction,
+    #: excluded from the pairwise coprimality sweep (DESIGN.md §12)
+    n_shared: int = 0
 
 
 class TenantNamespace:
@@ -124,13 +129,21 @@ class TenantNamespace:
 
     def __init__(self, n_tenants: int, stripes_per_tenant: int = 8,
                  ranges: Optional[Dict[int, Tuple[int, Optional[int]]]] = None,
-                 mem_initial_capacity: int = 1024):
+                 mem_initial_capacity: int = 1024, shared: bool = False):
         if n_tenants < 1:
             raise ValueError("n_tenants must be >= 1")
         self.ranges = dict(ranges or LEVEL_PRIME_RANGES)
-        self.stripes = BlockStripes(n_tenants, self.ranges,
+        # shared=True reserves ONE extra block family — the dedup
+        # namespace (DESIGN.md §12): part id ``n_tenants`` in the same
+        # BlockStripes deal, so shared blocks are disjoint from (hence
+        # shared primes coprime to) every tenant's blocks by the same
+        # construction that separates tenants from each other.
+        n_parts = n_tenants + 1 if shared else n_tenants
+        self.stripes = BlockStripes(n_parts, self.ranges,
                                     stripes_per_part=stripes_per_tenant)
-        self.n_tenants = self.stripes.n_parts
+        self.n_tenants = int(n_tenants)
+        self.n_parts = self.stripes.n_parts
+        self.shared_part: Optional[int] = n_tenants if shared else None
         self.mem_initial_capacity = mem_initial_capacity
 
     # ------------------------------------------------------------------ #
@@ -158,10 +171,12 @@ class TenantNamespace:
     def make_allocator(self, tenant: int) -> HierarchicalPrimeAllocator:
         """A level-pool façade whose every pool is restricted to the
         tenant's blocks (disjoint from every other tenant's by
-        construction)."""
-        if not 0 <= int(tenant) < self.n_tenants:
+        construction).  In a ``shared=True`` namespace, part id
+        ``shared_part`` (== ``n_tenants``) is a valid target too — the
+        dedup namespace's own allocator."""
+        if not 0 <= int(tenant) < self.n_parts:
             raise ValueError(f"tenant {tenant} out of range "
-                             f"[0, {self.n_tenants})")
+                             f"[0, {self.n_parts})")
         alloc = HierarchicalPrimeAllocator.__new__(HierarchicalPrimeAllocator)
         alloc.pools = {
             lvl: StripedPrimePool(level=lvl, lo=lo, hi=hi,
@@ -186,6 +201,15 @@ class TenantNamespace:
         additionally gcd-checks every cross-tenant composite pair
         against 1 — the coprimality statement of the theorem verified
         literally (quadratic; meant for tests and smoke benchmarks).
+
+        In a ``shared=True`` namespace the theorem statement weakens
+        exactly as DESIGN.md §12 proves it must: shared-part primes are
+        *deliberately* common, so a composite is a violation only when
+        its factors span two distinct **non-shared** tenants.  Wholly-
+        shared and mixed shared↔private composites are counted in
+        ``n_shared`` and excluded from the pairwise sweep (two tenants
+        diverging off the same shared page legitimately share that
+        page's prime across their COW-boundary edges).
         """
         arr = registry.composites_view()
         rep = IsolationReport(per_tenant=[0] * self.n_tenants,
@@ -194,12 +218,25 @@ class TenantNamespace:
         tenant_of_comp: List[int] = []
         for c in arr:
             primes = registry.decode(int(c))
-            ts = np.unique(self.tenant_of_values(
-                np.asarray(primes, dtype=np.int64)))
-            if ts.size == 1:
+            parts = self.tenant_of_values(np.asarray(primes, dtype=np.int64))
+            if self.shared_part is not None:
+                shared_mask = parts == self.shared_part
+                has_shared = bool(shared_mask.any())
+                ts = np.unique(parts[~shared_mask])
+            else:
+                has_shared = False
+                ts = np.unique(parts)
+            if ts.size == 0:              # wholly shared-namespace edge
+                rep.n_shared += 1
+                tenant_of_comp.append(-2)
+            elif ts.size == 1:
                 t = int(ts[0])
                 rep.per_tenant[t] += 1
-                tenant_of_comp.append(t)
+                if has_shared:            # mixed COW-boundary edge
+                    rep.n_shared += 1
+                    tenant_of_comp.append(-2)
+                else:
+                    tenant_of_comp.append(t)
             else:
                 rep.ok = False
                 rep.violations.append((int(c), tuple(int(t) for t in ts)))
@@ -208,7 +245,8 @@ class TenantNamespace:
             for i in range(arr.size):
                 for j in range(i + 1, arr.size):
                     if (tenant_of_comp[i] == tenant_of_comp[j]
-                            or -1 in (tenant_of_comp[i], tenant_of_comp[j])):
+                            or tenant_of_comp[i] < 0
+                            or tenant_of_comp[j] < 0):
                         continue
                     rep.coprime_pairs_checked += 1
                     if math.gcd(int(arr[i]), int(arr[j])) != 1:
@@ -251,10 +289,12 @@ class TenantAssigner:
                  recycle_fraction: float = 0.1):
         self.namespace = namespace
         self.registry = registry
+        # one assigner per part — includes the shared dedup part when
+        # the namespace was built with shared=True (DESIGN.md §12)
         self.per_tenant: List[PrimeAssigner] = [
             PrimeAssigner(namespace.make_allocator(t), registry,
                           recycle_fraction=recycle_fraction)
-            for t in range(namespace.n_tenants)]
+            for t in range(namespace.n_parts)]
         self._tenant_of_data: Dict[Hashable, int] = {}
 
     # -- tenant binding ----------------------------------------------------

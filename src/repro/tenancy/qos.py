@@ -54,7 +54,8 @@ from repro.serving.kv_cache_vec import EMPTY, VectorizedPagedKVCache
 from .namespace import TenantAssigner, TenantNamespace
 
 __all__ = [
-    "weighted_quotas", "TenantQoSConfig", "QuotaState",
+    "weighted_quotas", "refcount_weighted_shares", "TenantQoSConfig",
+    "QuotaState",
     "TenantedPagedKVCache", "TenantedVectorizedPagedKVCache",
     "TenantedShardedPagedKVCache", "TenantedElasticShardedPagedKVCache",
     "TenantedExpertCache", "TenantedVectorizedExpertCache",
@@ -109,12 +110,19 @@ def weighted_quotas(capacity: int, priorities: Sequence[int]) -> List[int]:
 
 @dataclass(frozen=True)
 class TenantQoSConfig:
-    """Per-tenant QoS contract: HBM quota, prefetch budget, priority."""
+    """Per-tenant QoS contract: HBM quota, prefetch budget, priority.
+
+    ``shared_quota`` (default 0) reserves HBM slots for the shared
+    dedup namespace's read-only pages (``repro.serving.dedup``,
+    DESIGN.md §12); it participates in the quota-partition inequality
+    — ``sum(hbm_quota) + shared_quota <= capacity`` — so shared pages
+    can never displace (or be displaced by) a tenant's private pages."""
 
     n_tenants: int
     hbm_quota: Tuple[int, ...]
     prefetch_budget: Tuple[int, ...]
     priority: Tuple[int, ...]
+    shared_quota: int = 0
 
     def validate(self, capacity: int) -> None:
         T = self.n_tenants
@@ -128,9 +136,12 @@ class TenantQoSConfig:
                                  f"{T} tenants")
         if any(q < 1 for q in self.hbm_quota):
             raise ValueError("every tenant needs hbm_quota >= 1")
-        if sum(self.hbm_quota) > capacity:
+        if self.shared_quota < 0:
+            raise ValueError("shared_quota must be >= 0")
+        if sum(self.hbm_quota) + self.shared_quota > capacity:
             raise ValueError(
-                f"sum(hbm_quota)={sum(self.hbm_quota)} exceeds HBM "
+                f"sum(hbm_quota)={sum(self.hbm_quota)} + "
+                f"shared_quota={self.shared_quota} exceeds HBM "
                 f"capacity {capacity} — quotas must partition HBM "
                 f"(that inequality IS the confinement guarantee)")
         if any(b < 0 for b in self.prefetch_budget):
@@ -176,9 +187,34 @@ class QuotaState:
         self.pf_budget = np.asarray(cfg.prefetch_budget, dtype=np.int32)
         self.priority = np.asarray(cfg.priority, dtype=np.int32)
         self.occupancy = np.zeros((T,), dtype=np.int32)
+        # shared dedup namespace residency (repro.serving.dedup):
+        # tracked as a scalar alongside the per-tenant arrays so the
+        # partition inequality stays checkable at runtime
+        self.shared_quota = int(getattr(cfg, "shared_quota", 0))
+        self.shared_occupancy = 0
         self.tenant_stats = None if stats_factory is None \
             else [stats_factory() for _ in range(T)]
         self.tenant_logs: List[List[Tuple[int, int]]] = [[] for _ in range(T)]
+
+
+def refcount_weighted_shares(occupancy: Sequence[int],
+                             shared_refs: Sequence[Dict[int, int]]
+                             ) -> np.ndarray:
+    """Refcount-weighted HBM accounting (DESIGN.md §12): each tenant is
+    charged its private occupancy plus, for every HBM-resident shared
+    page, the fraction of that page's references it holds —
+    ``occupancy[t] + Σ_pages ref_t(page) / ref(page)``.  The column sum
+    equals total resident pages, so dedup's HBM-bytes/user win shows up
+    as each tenant's charged share dropping below its no-dedup
+    footprint (``benchmarks.cases.case_dedup``)."""
+    out = np.asarray(occupancy, dtype=np.float64).copy()
+    for refs in shared_refs:
+        total = sum(refs.values())
+        if total <= 0:
+            continue
+        for t, r in refs.items():
+            out[t] += r / total
+    return out
 
 
 # --------------------------------------------------------------------------- #

@@ -50,7 +50,7 @@ __all__ = [
     "ExpertWorkloadSpec", "build_expert_sets", "drive_expert",
     "expert_workload_specs",
     "TenantMixSpec", "build_tenant_requests", "drive_tenants",
-    "tenant_mix_specs",
+    "tenant_mix_specs", "dedup_mix_specs",
     "ArrivalSpec", "build_poisson_arrivals", "drive_slots",
     "arrival_specs",
     "HAVE_HYPOTHESIS", "given", "settings", "st",
@@ -460,6 +460,30 @@ def tenant_mix_specs():
         cross_prefix=st.booleans(),
         release=st.booleans(),
         drop_primes=st.booleans(),
+    )
+
+
+def dedup_mix_specs():
+    """Tenant mixes biased to the dedup paths (tests/test_dedup.py):
+    identical cross-tenant token pools are ALWAYS on — the shared-
+    system-prompt workload where admissions hit, promote, and COW off
+    shared pages — with >= 2 tenants so promotion is reachable.  Prime
+    drops stay off (a dropped prime under a refcounted shared page is
+    the recycling fuzz's job, not the lifecycle fuzz's)."""
+    return st.builds(
+        TenantMixSpec,
+        seed=st.integers(min_value=0, max_value=2**16),
+        n_tenants=st.sampled_from([2, 4]),
+        n_requests=st.integers(min_value=4, max_value=12),
+        n_touches=st.integers(min_value=10, max_value=140),
+        key_space=st.sampled_from([60, 300]),
+        shared_pool=st.sampled_from([8, 24]),
+        max_tail=st.sampled_from([6, 20]),
+        hot_tenant=st.booleans(),
+        scanner_tenant=st.booleans(),
+        cross_prefix=st.just(True),
+        release=st.booleans(),
+        drop_primes=st.just(False),
     )
 
 

@@ -25,6 +25,22 @@ def test_all_doc_references_resolve():
     assert not problems, "\n".join(problems)
 
 
+def test_api_md_dedup_examples_execute():
+    """The docs/api.md COW-dedup section promises *executed* examples
+    (ISSUE 9): every ```python block in it must run clean.  Blocks
+    build on each other (the oracle from block 1 is re-used by the
+    accounting block), so they share one namespace, in order."""
+    import re
+    text = (ROOT / "docs" / "api.md").read_text()
+    start = text.index("## Cross-tenant COW shared-prefix dedup")
+    end = text.index("## Large universes")
+    blocks = re.findall(r"```python\n(.*?)```", text[start:end], re.S)
+    assert blocks, "dedup section lost its examples"
+    ns = {}
+    for i, block in enumerate(blocks):
+        exec(compile(block, f"<api.md dedup {i}>", "exec"), ns)
+
+
 def test_api_md_large_universe_examples_execute():
     """The docs/api.md "Large universes" section promises *executed*
     examples (ISSUE 8): every ```python block in it must run clean."""

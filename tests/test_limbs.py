@@ -252,3 +252,37 @@ def test_wide_tenancy_composes():
     t.touch_batch([(0, 0), (1, 0), (0, 3), (1, 3)])
     assert t.cross_tenant_prefetches() == 0
     assert t.namespace.check_isolation(t.registry, pairwise_gcd=True).ok
+
+
+def test_wide_shared_prefix_parity():
+    """Scalar ``shared_prefix`` under a wide registry: deep chains whose
+    chain composites exceed int64 (and any budgeted factorization) must
+    still recover the exact shared page run — pool trial division over
+    the chain's own primes is width-agnostic — and agree with the
+    narrow scalar result and the vectorized batched-gcd twin."""
+    from repro.serving.engine import make_kv_backend
+
+    def drive(kv, max_bits):
+        c = make_kv_backend(kv, hbm_pages=64, page_size=1,
+                            prefetch_budget=0, max_bits=max_bits,
+                            **({"mesh": None} if kv == "sharded" else {}))
+        shared = list(range(40))                 # 40-page shared run
+        c.register_request(0, shared + [100, 101])
+        c.register_request(1, shared + [200])
+        c.register_request(2, [300, 301, 302])   # disjoint control
+        return c
+
+    narrow = drive("scalar", 62)
+    want = narrow.shared_prefix(0, 1)
+    assert len(want) == 40                       # the whole shared run
+    assert narrow.shared_prefix(0, 2) == []
+    for kv in ("scalar", "vec", "sharded"):
+        for max_bits in (128, 1024):
+            c = drive(kv, max_bits)
+            # the 40-prime chain composite genuinely exceeds int64
+            comp = 1
+            for pid in c.chains[0]:
+                comp *= c.assigner.prime_of(pid)
+            assert comp.bit_length() > 63
+            assert c.shared_prefix(0, 1) == want, (kv, max_bits)
+            assert c.shared_prefix(0, 2) == [], (kv, max_bits)

@@ -384,3 +384,114 @@ def test_assigner_release_idempotent_and_epoch():
     # the freed prime is reusable exactly once
     assert assigner.assign("y", CacheLevel.L2) == p
     assert assigner.assign("z", CacheLevel.L2) != p
+
+
+# --------------------------------------------------------------------------- #
+# batched (streamed) build — bit-identical to the per-element loop            #
+# --------------------------------------------------------------------------- #
+
+def _registry_state(reg):
+    """Full observable registry state (dict orders included)."""
+    return (
+        reg._next_id, reg.version,
+        list(reg._by_composite.items()),
+        dict(reg._prime_degree),
+        {rid: (r.rel_id, r.primes, r.composites, r.kind, r.weight)
+         for rid, r in reg._by_id.items()},
+    )
+
+
+@pytest.mark.parametrize("max_bits", [62, 1024])
+def test_batched_build_state_identity(max_bits):
+    """``assign_many`` + ``register_many`` (the case_scale streamed
+    build) must leave the assigner and registry in *bit-identical*
+    state vs the scalar per-element loop — same primes in the same
+    order, same relationship ids, same composite dict order, same
+    ``version`` — in both narrow and wide (multi-limb) modes."""
+    from repro.core.primes import CacheLevel as CL
+
+    def build(batched):
+        reg = CompositeRegistry(max_bits=max_bits)
+        asg = PrimeAssigner(HierarchicalPrimeAllocator(), reg)
+        n_chains, depth = 8, 12
+        if batched:
+            prime_of = asg.assign_many(range(n_chains * depth), CL.MEM)
+        else:
+            prime_of = [asg.assign(d, CL.MEM)
+                        for d in range(n_chains * depth)]
+        for c in range(n_chains):
+            row = prime_of[c * depth:(c + 1) * depth]
+            if batched:
+                reg.register_many(zip(row, row[1:]), kind="chain")
+            else:
+                for a, b in zip(row, row[1:]):
+                    reg.register((a, b), kind="chain")
+            if c % 4 == 0:
+                reg.register(row, kind="group")
+        return reg, asg, prime_of
+
+    r1, a1, p1 = build(False)
+    r2, a2, p2 = build(True)
+    assert p1 == p2
+    assert _registry_state(r1) == _registry_state(r2)
+    assert a1._data_to_prime == a2._data_to_prime
+    assert a1._prime_to_data == a2._prime_to_data
+    assert (a1.stats.assigned, a1.stats.reused) == \
+           (a2.stats.assigned, a2.stats.reused)
+
+
+def test_allocate_many_matches_scalar_sequence():
+    from repro.core.primes import PrimePool
+
+    s, b = PrimePool(level=0, lo=2, hi=997), PrimePool(level=0, lo=2, hi=997)
+    assert [s.allocate() for _ in range(20)] == b.allocate_many(20)
+    # free-list consumption is smallest-first in both paths
+    for p in (7, 61, 13):
+        s.free(p)
+        b.free(p)
+    assert [s.allocate() for _ in range(5)] == b.allocate_many(5)
+    assert s._allocated == b._allocated
+    assert sorted(s._free) == sorted(b._free)
+    # bounded pool running dry: batched returns the scalar prefix
+    sd, bd = PrimePool(level=0, lo=2, hi=29), PrimePool(level=0, lo=2, hi=29)
+    scalar = [sd.allocate() for _ in range(20)]
+    assert bd.allocate_many(20) == [p for p in scalar if p is not None]
+    assert bd.allocate_many(3) == []
+    assert bd.allocate_many(0) == []
+
+
+def test_assign_many_mixed_warm_and_duplicates():
+    """Warm elements and within-batch duplicates must break the bulk
+    run and fall back to scalar ``assign`` at their original position,
+    keeping allocation order (and stats) identical."""
+    s = PrimeAssigner(registry=CompositeRegistry())
+    b = PrimeAssigner(registry=CompositeRegistry())
+    ds = ["a", "b", "c", "b", "d", "warm", "a", "e"]
+    s.tracker.record("warm")
+    b.tracker.record("warm")
+    assert [s.assign(d, CacheLevel.L2) for d in ds] == \
+        b.assign_many(ds, CacheLevel.L2)
+    assert s._data_to_prime == b._data_to_prime
+    assert (s.stats.assigned, s.stats.reused) == \
+           (b.stats.assigned, b.stats.reused)
+
+
+def test_register_many_error_parity_preserves_prefix():
+    """A failing group mid-batch raises the canonical encoder error and
+    leaves exactly the scalar loop's partial state (completed prefix
+    registered, failing group not)."""
+    groups = [(3, 5), (7, 11), (13, 1)]
+    s, b = CompositeRegistry(), CompositeRegistry()
+    with pytest.raises(ValueError, match="not a prime: 1") as e_scalar:
+        for g in groups:
+            s.register(g)
+    with pytest.raises(ValueError, match="not a prime: 1") as e_batch:
+        b.register_many(groups)
+    assert str(e_scalar.value) == str(e_batch.value)
+    assert _registry_state(s) == _registry_state(b)
+    with pytest.raises(ValueError):
+        b.register_many([(17,)])            # < 2 distinct elements
+    # wide mode: oversized prime rejected with the canonical limb error
+    w = CompositeRegistry(max_bits=128)
+    with pytest.raises(ValueError, match="kernel limb word"):
+        w.register_many([(3, (1 << 31) + 11)])
