@@ -94,7 +94,7 @@ def case_hft(seed: int = 0):
     return out
 
 
-def case_scale(smoke: bool = False):
+def case_scale(smoke: bool = False, quiet=None):
     """Million-element wide-registry scale case (the former 62-bit
     ceiling, DESIGN.md §11).
 
@@ -118,6 +118,14 @@ def case_scale(smoke: bool = False):
     from repro.core.primes import CacheLevel, HierarchicalPrimeAllocator
     from repro.kernels import (divisibility_scan_limbs,
                                factorize_batch_exact, gcd_batch_exact)
+    from repro.obs import profile
+    from repro.obs.telemetry import Progress
+
+    # progress lines default off under smoke (the CI path, where they
+    # only bloat logs) and on for interactive full runs; the rate
+    # accounting itself always feeds the wall-clock-exempt obs block
+    if quiet is None:
+        quiet = smoke
 
     n_chains, depth, max_bits = 10_000, 100, 1024
     group_stride = 16                 # every 16th chain -> 625 groups
@@ -137,12 +145,15 @@ def case_scale(smoke: bool = False):
     assign_wall = time.perf_counter() - t0
 
     t0 = time.perf_counter()
+    prog = Progress(n_chains, label="register chains", quiet=quiet)
     for c in range(n_chains):
         base = c * depth
         row = prime_of[base:base + depth]
         registry.register_many(zip(row, row[1:]), kind="chain")
         if c % group_stride == 0:
             registry.register(row, kind="group")   # -> wide chunks
+        prog.advance()
+    build_rate = prog.finish()
     register_wall = time.perf_counter() - t0
 
     comps = registry.composites_list()
@@ -176,6 +187,8 @@ def case_scale(smoke: bool = False):
     limbs = pack_limbs(sample, L)
     queries = pool[::7] + negatives
 
+    profile.reset()
+    profile.enable(True)        # launch ledger -> obs block (exempt)
     t0 = time.perf_counter()
     idx = divisibility_scan_limbs(limbs, queries)
     scan_wall = time.perf_counter() - t0
@@ -214,6 +227,8 @@ def case_scale(smoke: bool = False):
     assert gs == [_math.gcd(a, b) for a, b in zip(ga, gb)], \
         "limb gcd diverged from exact host gcd"
     gcd_nontrivial = sum(1 for g in gs if g > 1)
+    profile.enable(False)
+    launches = profile.summary()
 
     print(f"\n== Case study: million-element wide registry "
           f"(max_bits={max_bits}, {L} limbs) ==")
@@ -246,6 +261,9 @@ def case_scale(smoke: bool = False):
         ),
         assign_wall_s=assign_wall, register_wall_s=register_wall,
         scan_wall_s=scan_wall, factor_wall_s=factor_wall,
+        # wall-clock-exempt reporting block (gate skips the whole
+        # component — tools/check_bench_regression.py EXEMPT_COMPONENTS)
+        obs=dict(registry_build=build_rate, kernel_launches=launches),
     )
     save_json("case_scale", out)
     save_bench("case_scale", out)

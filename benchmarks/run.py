@@ -32,6 +32,11 @@ def main(argv=None) -> None:
     ap.add_argument("--scale", type=float, default=1.0,
                     help="trace-length multiplier for table1/fig2 "
                          "(the vectorized engine handles >=10x)")
+    ap.add_argument("--quiet", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="suppress case_scale build progress lines "
+                         "(default: quiet under --smoke — the CI path — "
+                         "and verbose otherwise)")
     ap.add_argument("--shards", type=int, default=None,
                     help="run case_serving's sharded-cache config at "
                          "exactly N shards (default: sweep 1/2/4, smoke "
@@ -53,8 +58,9 @@ def main(argv=None) -> None:
         cases.case_moe(smoke=True)
         cases.case_tenancy(smoke=True)
         cases.case_batching(smoke=True)
-        cases.case_scale(smoke=True)
+        cases.case_scale(smoke=True, quiet=args.quiet)
         cases.case_dedup(smoke=True)
+        kernel_bench.run_smoke()
         print(f"\ntotal benchmark wall time: {time.time() - t0:.1f}s")
         return
 
@@ -69,9 +75,10 @@ def main(argv=None) -> None:
     cases.case_moe()
     cases.case_tenancy()
     cases.case_batching()
-    cases.case_scale()
+    cases.case_scale(quiet=args.quiet)
     cases.case_dedup()
     kernel_bench.run()
+    kernel_bench.run_smoke()
 
     if not args.skip_roofline:
         try:

@@ -52,6 +52,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs.profile import kernel_scope
 from repro.sharding.stripes import BlockStripes
 
 from ..composite import encode_relationship
@@ -236,7 +237,7 @@ def _scan_sharded(local_c: np.ndarray, queries: np.ndarray,
     Q = queries.shape[1]
     K = chunks.shape[1]
 
-    with enable_x64(True):
+    with enable_x64(True), kernel_scope("sharded_gcd_exchange", items=S * C):
         if mesh is not None and mesh.size == S:
             fn = _shard_map_scan(mesh, (C, Q, K, cross_c.shape[1]),
                                  interpret)
@@ -346,7 +347,8 @@ def _scan_sharded_limbs(local_c: np.ndarray, queries: np.ndarray,
     Q = queries.shape[1]
     K = chunks.shape[1]
 
-    with enable_x64(True):
+    with enable_x64(True), kernel_scope("sharded_gcd_exchange_limbs",
+                                        items=S * C):
         if mesh is not None and mesh.size == S:
             fn = _shard_map_scan_limbs(
                 mesh, (C, Q, K, pools.shape[1], cross_c.shape[1]), interpret)

@@ -21,6 +21,7 @@ from jax.experimental import enable_x64
 
 from repro.core.composite import (LIMB_BITS, limbs_to_int, n_limbs_for_bits,
                                   pack_limbs, unpack_limbs)
+from repro.obs.profile import kernel_scope
 
 from .factorize import (divisibility_mask_limbs_pallas,
                         divisibility_mask_pallas, factorize_limbs_pallas,
@@ -80,11 +81,12 @@ def factorize_batch(
     comp_p = _pad_to(comp.astype(dt), block_n, 1)
     pool_p = _pad_to(pool.astype(dt), block_p, 0)
     with enable_x64(True) if dt == np.int64 else _nullcontext():
-        mask, residual = factorize_squarefree_pallas(
-            jnp.asarray(comp_p), jnp.asarray(pool_p),
-            block_n=block_n, block_p=block_p, interpret=interpret)
-        mask = np.asarray(mask)[:n, :p]
-        residual = np.asarray(residual)[:n]
+        with kernel_scope("factorize_batch", items=n):
+            mask, residual = factorize_squarefree_pallas(
+                jnp.asarray(comp_p), jnp.asarray(pool_p),
+                block_n=block_n, block_p=block_p, interpret=interpret)
+            mask = np.asarray(mask)[:n, :p]
+            residual = np.asarray(residual)[:n]
     factors = [[int(pool[j]) for j in np.nonzero(mask[i])[0]] for i in range(n)]
     return factors, residual.astype(np.int64)
 
@@ -112,10 +114,11 @@ def divisibility_scan(
     reg_p = _pad_to(reg.astype(dt), block_n, 1)
     qs_p = _pad_to(qs.astype(dt), block_p, 0)
     with enable_x64(True) if dt == np.int64 else _nullcontext():
-        mask = divisibility_mask_pallas(
-            jnp.asarray(reg_p), jnp.asarray(qs_p),
-            block_n=block_n, block_p=block_p, interpret=interpret)
-        mask = np.asarray(mask)[:n, :q]
+        with kernel_scope("divisibility_scan", items=n):
+            mask = divisibility_mask_pallas(
+                jnp.asarray(reg_p), jnp.asarray(qs_p),
+                block_n=block_n, block_p=block_p, interpret=interpret)
+            mask = np.asarray(mask)[:n, :q]
     return [np.nonzero(mask[:, j])[0] for j in range(q)]
 
 
@@ -138,9 +141,10 @@ def gcd_batch(
     ap = _pad_to(aa.astype(dt), block_n, 0)
     bp = _pad_to(bb.astype(dt), block_n, 0)
     with enable_x64(True) if dt == np.int64 else _nullcontext():
-        g = gcd_pallas(jnp.asarray(ap), jnp.asarray(bp),
-                       block_n=block_n, interpret=interpret)
-        g = np.asarray(g)[:n]
+        with kernel_scope("gcd_batch", items=n):
+            g = gcd_pallas(jnp.asarray(ap), jnp.asarray(bp),
+                           block_n=block_n, interpret=interpret)
+            g = np.asarray(g)[:n]
     return g.astype(np.int64)
 
 
@@ -196,10 +200,11 @@ def divisibility_scan_limbs(
         if n % block_n else limbs
     qs_p = _pad_to(qs, block_p, 0)
     with enable_x64(True):
-        mask = divisibility_mask_limbs_pallas(
-            jnp.asarray(limbs_p), jnp.asarray(qs_p),
-            block_n=block_n, block_p=block_p, interpret=interpret)
-        mask = np.asarray(mask)[:n, :q]
+        with kernel_scope("divisibility_scan_limbs", items=n):
+            mask = divisibility_mask_limbs_pallas(
+                jnp.asarray(limbs_p), jnp.asarray(qs_p),
+                block_n=block_n, block_p=block_p, interpret=interpret)
+            mask = np.asarray(mask)[:n, :q]
     return [np.nonzero(mask[:, j])[0] for j in range(q)]
 
 
@@ -233,11 +238,12 @@ def factorize_batch_limbs(
         if n % block_n else limbs
     pool_p = _pad_to(pool, block_p, 0)
     with enable_x64(True):
-        mask, residual = factorize_limbs_pallas(
-            jnp.asarray(limbs_p), jnp.asarray(pool_p),
-            block_n=block_n, block_p=block_p, interpret=interpret)
-        mask = np.asarray(mask)[:n, :p]
-        residual = np.asarray(residual)[:n]
+        with kernel_scope("factorize_batch_limbs", items=n):
+            mask, residual = factorize_limbs_pallas(
+                jnp.asarray(limbs_p), jnp.asarray(pool_p),
+                block_n=block_n, block_p=block_p, interpret=interpret)
+            mask = np.asarray(mask)[:n, :p]
+            residual = np.asarray(residual)[:n]
     factors = [[int(pool[j]) for j in np.nonzero(mask[i])[0]]
                for i in range(n)]
     return factors, unpack_limbs(residual)
@@ -272,10 +278,11 @@ def gcd_batch_limbs(
         bb = np.concatenate([bb, _pad_rows_one(bb.shape[1], pad)])
     pool_p = _pad_to(pl_, block_p, 0)
     with enable_x64(True):
-        g = gcd_limbs_pallas(jnp.asarray(aa), jnp.asarray(bb),
-                             jnp.asarray(pool_p), block_n=block_n,
-                             block_p=block_p, interpret=interpret)
-        g = np.asarray(g)[:n]
+        with kernel_scope("gcd_batch_limbs", items=n):
+            g = gcd_limbs_pallas(jnp.asarray(aa), jnp.asarray(bb),
+                                 jnp.asarray(pool_p), block_n=block_n,
+                                 block_p=block_p, interpret=interpret)
+            g = np.asarray(g)[:n]
     return unpack_limbs(g)
 
 

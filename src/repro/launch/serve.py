@@ -60,7 +60,20 @@ def main(argv=None):
     ap.add_argument("--null-model", action="store_true",
                     help="no device decode: pure page-management load "
                          "generation (scales to hundreds of slots)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="record the observability layer (event ring + "
+                         "telemetry + kernel ledger, DESIGN.md §13) and "
+                         "write the export JSON here; feed it to "
+                         "tools/trace_view.py for a Chrome trace")
     args = ap.parse_args(argv)
+
+    obs = None
+    if args.trace:
+        from repro.obs import Observability, profile
+
+        obs = Observability()
+        profile.reset()
+        profile.enable(True)
 
     if args.null_model:
         model, params, vocab = None, None, 32_000
@@ -90,7 +103,7 @@ def main(argv=None):
 
         machine = SlotMachine(max_batch=args.max_batch, kv=args.kv,
                               prefill_tokens=args.prefill_tokens,
-                              max_bits=args.max_bits)
+                              max_bits=args.max_bits, obs=obs)
         arrivals = poisson_arrival_ticks(len(prompts), args.arrival_rate)
         for prompt, tick in zip(prompts, arrivals):
             machine.submit(prompt, max_new_tokens=args.max_new,
@@ -122,7 +135,7 @@ def main(argv=None):
 
         engine = ServingEngine(model, params, max_batch=args.max_batch,
                                max_seq=args.max_seq, kv=args.kv,
-                               max_bits=args.max_bits)
+                               max_bits=args.max_bits, obs=obs)
         for prompt in prompts:
             engine.submit(prompt, max_new_tokens=args.max_new)
         t0 = time.time()
@@ -147,6 +160,14 @@ def main(argv=None):
             "registry_scans": st.registry_scans,
         }
         pages = engine.pages
+    if obs is not None:
+        from repro.obs import profile
+
+        profile.enable(False)
+        obs.export_json(args.trace)
+        out["trace_events"] = obs.trace.total
+        print(f"observability export ({obs.trace.total} events) "
+              f"-> {args.trace}", flush=True)
     print(json.dumps(out, indent=1))
     # deterministic shared-prefix discovery demo
     if len(pages.chains) >= 2:

@@ -1,0 +1,99 @@
+"""Kernel profiling hooks: named scopes + a wall-clock launch ledger
+(DESIGN.md §13).
+
+Every Pallas launch wrapper in ``repro.kernels.ops`` (and the shard_map
+gcd exchange in ``repro.core.engine.shard``) runs its body under
+:func:`kernel_scope`, which does two things:
+
+  * always annotates the region with ``jax.named_scope`` — a pure
+    metadata tag visible to ``jax.profiler`` traces and XLA HLO dumps,
+    with zero numeric effect;
+  * when profiling is **enabled** (off by default), times the region
+    with ``time.perf_counter`` and accumulates a per-name launch ledger
+    ``{calls, items, wall_s}``.
+
+The ledger is process-global on purpose: kernel launches happen deep
+under cache internals where threading a handle through every call
+would be pure noise, and wall clocks are only ever *reported* (into
+the wall-clock-exempt ``obs`` block of ``BENCH_*.json``), never gated.
+Disabled, the only residue is one module-level boolean check per
+launch.
+"""
+
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from typing import Dict
+
+import jax
+
+__all__ = ["kernel_scope", "enable", "enabled", "reset", "summary",
+           "profiling"]
+
+_enabled = False
+_ledger: Dict[str, Dict[str, float]] = {}
+
+
+def enable(on: bool = True) -> None:
+    """Turn the wall-clock launch ledger on/off (named scopes are
+    always applied)."""
+    global _enabled
+    _enabled = bool(on)
+
+
+def enabled() -> bool:
+    return _enabled
+
+
+def reset() -> None:
+    """Drop all accumulated ledger entries."""
+    _ledger.clear()
+
+
+def summary() -> Dict[str, Dict[str, float]]:
+    """Per-kernel launch ledger: ``{name: {calls, items, wall_s}}``."""
+    return {name: dict(rec) for name, rec in sorted(_ledger.items())}
+
+
+@contextmanager
+def kernel_scope(name: str, items: int = 0):
+    """Annotate (always) and, when enabled, time one kernel launch.
+
+    ``items`` is the batch size the launch processed (composites,
+    query primes, gcd pairs, ...) so the ledger can report per-item
+    rates alongside raw walls.
+    """
+    with jax.named_scope(name):
+        if not _enabled:
+            yield
+            return
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            dt = time.perf_counter() - t0
+            rec = _ledger.setdefault(
+                name, {"calls": 0, "items": 0, "wall_s": 0.0})
+            rec["calls"] += 1
+            rec["items"] += int(items)
+            rec["wall_s"] += dt
+
+
+@contextmanager
+def profiling():
+    """Scoped enable: ledger is reset and collected for the duration.
+
+    Yields the live ledger dict so callers can snapshot it on exit::
+
+        with profiling():
+            run_benchmark()
+            obs_block = {"kernel_launches": summary()}
+    """
+    prev = _enabled
+    reset()
+    enable(True)
+    try:
+        yield _ledger
+    finally:
+        enable(prev)

@@ -55,11 +55,13 @@ Entry points, documented with runnable examples in docs/api.md:
 from __future__ import annotations
 
 from dataclasses import replace
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Dict, List, Optional, Set, Tuple, Union
 
 import numpy as np
 
 from repro.core.primes import CacheLevel
+from repro.obs.trace import (EV_AGE_OUT, EV_COW, EV_DEDUP_HIT,
+                             EV_DEDUP_PROMOTE)
 from repro.serving.kv_cache import PARITY_COUNTERS, PagedKVCache
 from repro.serving.kv_cache_vec import EMPTY, VectorizedPagedKVCache
 from repro.tenancy.namespace import TenantNamespace
@@ -132,6 +134,17 @@ class _DedupBase:
         #: per live request: leading shared-page run length (pages) —
         #: the prefill the slot machine may skip
         self.dedup_prefix: Dict[int, int] = {}
+        #: reverse of ``_global_content`` for shared pages only
+        #: (page id -> content key), so age-out can drop the entry
+        self._shared_key: Dict[int, Tuple[int, ...]] = {}
+        #: (page id, prime) of every aged-out shared page, in order —
+        #: the refcount-lifecycle audit trail (tests/test_dedup.py)
+        self.dedup_aged: List[Tuple[int, int]] = []
+        #: aged pages whose prime release is deferred to the next
+        #: admission (releasing mid-touch would mutate the registry
+        #: under the live §4.2 scan / successor rows)
+        self._aged_pending: List[int] = []
+        self._aged_pending_set: Set[int] = set()
         #: admission gcd probes run (each asserts Theorem-1 recovery)
         self.dedup_probes = 0
         self._walk_refs: List[int] = []
@@ -178,7 +191,7 @@ class _DedupBase:
     def _walk_note_shared(self, pid: int) -> None:
         self._walk_refs.append(pid)
 
-    def _walk_note_private(self, fresh: bool) -> None:
+    def _walk_note_private(self, fresh: bool) -> bool:
         if not self._walk_diverged:
             self._walk_diverged = True
             if fresh and self._walk_refs:
@@ -186,6 +199,8 @@ class _DedupBase:
                 # fresh PRIVATE page with a fresh prime — the shared
                 # page and its composites are untouched (tested)
                 self.stats.cow_copies += 1
+                return True
+        return False
 
     def _page_for_tokens(self, token_block) -> Tuple[int, bool]:
         key = tuple(token_block)
@@ -198,6 +213,9 @@ class _DedupBase:
             if ss is not None:        # keep sum(shard_stats) == stats
                 ss[self.owner_of_page(owner)].shared_prefix_pages += 1
             self._walk_note_shared(owner)
+            if self.obs is not None:
+                self.obs.emit(EV_DEDUP_HIT, page=owner,
+                              tenant=self._current_tenant)
             return owner, True
         if owner is not None and self.tenant_of_page(owner) \
                 != self._current_tenant:
@@ -206,20 +224,65 @@ class _DedupBase:
             # private page; the content is shared from here on)
             pid = self._alloc_shared_page()
             self._global_content[key] = pid
+            self._shared_key[pid] = key
             self.stats.dedup_promotions += 1
             self._walk_note_shared(pid)
+            if self.obs is not None:
+                self.obs.emit(EV_DEDUP_PROMOTE, page=pid,
+                              tenant=self._current_tenant)
             return pid, False
         # same-tenant reuse (owner is this tenant's private page) or a
         # fresh allocation — both through the tenant-scoped path
-        self._walk_note_private(fresh=owner is None)
+        cow = self._walk_note_private(fresh=owner is None)
         pid, reused = super()._page_for_tokens(token_block)
         if owner is None:
             self._global_content[key] = pid
+        if cow and self.obs is not None:
+            self.obs.emit(EV_COW, page=pid, tenant=self._current_tenant)
         return pid, reused
+
+    # -- shared-page age-out (the PR 9 leak fix) ---------------------------
+
+    def _age_out_shared(self, pid: int) -> None:
+        """End-of-life for a zero-ref shared page evicted from the
+        shared quota: drop its ``_global_content`` entry (these used to
+        leak — the content map grew monotonically and kept resurrecting
+        dead pages), bar it from prefetch resurrection, and schedule
+        its prime for recycling.  The ``assigner.release`` itself is
+        deferred to the next admission: running it here would drop
+        composites out of the registry while the §4.2 scan (scalar) or
+        a successor row (vec) of the very touch that triggered the
+        eviction is still being iterated."""
+        key = self._shared_key.pop(pid, None)
+        if key is not None and self._global_content.get(key) == pid:
+            del self._global_content[key]
+        self._shared_users.pop(pid, None)
+        p = self.assigner.prime_of(pid)
+        self.dedup_aged.append((pid, -1 if p is None else int(p)))
+        self._aged_pending.append(pid)
+        self._aged_pending_set.add(pid)
+        if self.obs is not None:
+            self.obs.emit(EV_AGE_OUT, page=pid, tenant=self.shared_part)
+
+    def _flush_aged(self) -> None:
+        """Recycle the primes of aged-out shared pages (admission-time:
+        the registry is quiescent here).  Dropping the prime purges its
+        chain composites — all of them belong to dead chains or dangle
+        off the dead page, since refs hit 0 only when no live chain
+        contains it — and bumps the assigner epoch, which forces the
+        vec twin's chunk caches and successor tables to rebuild (the
+        PR 5 recycling machinery, so twin parity is preserved)."""
+        if not self._aged_pending:
+            return
+        for pid in self._aged_pending:
+            self.assigner.release(pid, CacheLevel.L2)
+        self._aged_pending.clear()
+        self._aged_pending_set.clear()
 
     # -- request lifecycle -------------------------------------------------
 
     def register_request(self, req_id: int, tokens, tenant: int = 0):
+        self._flush_aged()
         if req_id in self.chains:             # re-register: drop old refs
             self._drop_refs(req_id)
         self._walk_refs = []
@@ -285,6 +348,12 @@ class _DedupBase:
         # blocked: the COW boundary fans out to EVERY diverging
         # tenant's private page, and the touching requester's identity
         # is not part of the §4.2 scan.
+        if tgt in self._aged_pending_set:
+            # dead page awaiting prime recycle: its registry edges are
+            # still visible to the scan, but resurrecting it would race
+            # the deferred release (skipped without consuming budget —
+            # both twins walk the same candidate order)
+            return False
         pt = self._part_of_page(tgt)
         return pt == self.shared_part or pt == self._part_of_page(src)
 
@@ -337,6 +406,8 @@ class _DedupBase:
             "prefix": dict(sorted(self.dedup_prefix.items())),
             "shared_occupancy": int(self.qos.shared_occupancy),
             "probes": int(self.dedup_probes),
+            "aged": list(self.dedup_aged),
+            "aged_pending": list(self._aged_pending),
         }
 
 
@@ -367,9 +438,12 @@ class _DedupScalarPlacement(_DedupBase):
                 self.host.add(pid)
                 return
             del self.hbm[victim]
-            self.host.add(victim)
             self.stats.evictions += 1
+            self._note_evict(victim)
             q.shared_occupancy -= 1
+            # zero-ref + evicted = end of life: no host demotion — the
+            # page's content entry and prime are reclaimed instead
+            self._age_out_shared(victim)
         PagedKVCache._insert_hbm(self, pid, prefetched)
         q.shared_occupancy += 1
 
@@ -438,10 +512,11 @@ class _DedupVecPlacement(_DedupBase):
             stamps = np.where(mask, self.slot_t[:n], _STAMP_MAX)
             s = int(np.argmin(stamps))
             victim = int(self.slot_page[s])
-            self.slot_of[victim] = EMPTY
-            self.in_host[victim] = True
+            self.slot_of[victim] = EMPTY    # no host demotion: aged out
             self.stats.evictions += 1
+            self._note_evict(victim)
             q.shared_occupancy -= 1
+            self._age_out_shared(victim)
             self.in_host[pid] = False
             self.slot_page[s] = pid
             self.slot_of[pid] = s

@@ -54,6 +54,7 @@ from typing import Callable, List, Optional, Tuple
 
 from repro.core.engine.shard import (PrimeSpacePartition, ShardScanReport,
                                      shard_mesh, sharded_successor_table)
+from repro.obs.trace import EV_RECOVERY
 from repro.sharding.reshard import ReshardPlan, ShardSlices
 from repro.training.elastic import ElasticPlanner, FleetState, StragglerMonitor
 
@@ -194,6 +195,8 @@ class ElasticShardedPagedKVCache(ShardedPagedKVCache):
                              rows_rebuilt=len(rows),
                              pages=tuple(sorted(int(d) for d in rows)))
         self.recovery_log.append(rep)
+        if self.obs is not None:
+            self.obs.emit(EV_RECOVERY, shard=shard, arg=n_refac)
         return rep
 
     # ------------------------------------------------------------------ #

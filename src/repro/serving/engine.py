@@ -232,7 +232,7 @@ class ServingEngine:
                  moe_slots: int = 16, moe_topk: int = 4,
                  moe_prefetch_budget: int = 4, moe_groups: int = 16,
                  moe_seed: int = 0, tenants=None, max_bits: int = 62,
-                 dedup: bool = False):
+                 dedup: bool = False, obs=None):
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -290,6 +290,13 @@ class ServingEngine:
         self._next_id = 0
         self.steps = 0
         self.peak_live = 0          # max concurrent requests in one step
+        #: observability sink — None by default (inert); attaching one
+        #: also wires the page/expert tiers into the same event stream
+        self.obs = obs
+        if obs is not None:
+            self.pages.obs = obs
+            if self.experts is not None:
+                self.experts.obs = obs
         # pages of KV context each decode step demand-reads per request:
         # the last `reread_window` pages of the chain, oldest first (paged
         # attention touches the recent context window; 1 = tail only)
@@ -459,6 +466,8 @@ class ServingEngine:
                 req.done_t = now
                 self.pages.release_request(req.req_id)
                 self.slots[i] = None
+        if self.obs is not None and self.obs.telemetry is not None:
+            self.obs.telemetry.tick_engine(self)
         self.steps += 1
         out = {"live": len(live), "page_stats": self.pages.stats}
         if self.tenants is not None:

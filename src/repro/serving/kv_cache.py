@@ -32,6 +32,7 @@ from repro.core.assignment import PrimeAssigner
 from repro.core.composite import CompositeRegistry, encode_relationship
 from repro.core.factorization import Factorizer
 from repro.core.primes import CacheLevel, HierarchicalPrimeAllocator
+from repro.obs.trace import EV_EVICT, EV_PREFETCH
 
 __all__ = ["PagedKVCache", "PageStats", "PARITY_COUNTERS"]
 
@@ -102,6 +103,11 @@ class PagedKVCache:
         self._content: Dict[Tuple, int] = {}  # content key -> page id (prefix share)
         self._next_page = 0
         self.stats = PageStats()
+        #: observability sink (repro.obs.Observability) — ``None`` by
+        #: default; every hook below is ``if self.obs is not None``
+        #: guarded, so the disabled path adds one attribute check and
+        #: nothing else (inertness contract, tests/test_obs.py)
+        self.obs = None
         #: every (source page, prefetched page) pair ever issued, in
         #: order — the zero-false-positive audit trail, and part of the
         #: scalar/vec parity contract (tests/test_serving.py,
@@ -193,11 +199,21 @@ class PagedKVCache:
     # placement                                                            #
     # ------------------------------------------------------------------ #
 
+    def _note_evict(self, pid: int) -> None:
+        """Trace one HBM eviction with tenant attribution (shared by the
+        scalar and array placement paths — both call it exactly once per
+        eviction, inside the insert that displaced the victim)."""
+        if self.obs is not None:
+            tenant = getattr(self, "tenant_of_page", lambda _p: -1)(pid)
+            self.obs.emit(EV_EVICT, page=pid,
+                          tenant=-1 if tenant is None else int(tenant))
+
     def _evict_to_host(self) -> None:
         while len(self.hbm) > self.hbm_capacity:
             pid, _ = self.hbm.popitem(last=False)
             self.host.add(pid)
             self.stats.evictions += 1
+            self._note_evict(pid)
 
     def _insert_hbm(self, pid: int, prefetched: bool) -> None:
         self.host.discard(pid)
@@ -274,6 +290,8 @@ class PagedKVCache:
                 self._insert_hbm(succ, True)
                 self.stats.prefetches += 1
                 self.prefetch_log.append((pid, succ))
+                if self.obs is not None:
+                    self.obs.emit(EV_PREFETCH, page=pid, arg=succ)
                 budget -= 1
                 if budget <= 0:
                     return

@@ -45,6 +45,7 @@ import numpy as np
 
 from repro.core.engine.shard import (PrimeSpacePartition, ShardScanReport,
                                      shard_mesh, sharded_successor_table)
+from repro.obs.trace import EV_GCD_EXCHANGE
 
 from .kv_cache import PARITY_COUNTERS, PageStats
 from .kv_cache_vec import VectorizedPagedKVCache
@@ -118,6 +119,9 @@ class ShardedPagedKVCache(VectorizedPagedKVCache):
                                        range(self._next_page),
                                        self.partition, mesh=self.mesh,
                                        report=self.last_scan)
+        if self.obs is not None:
+            for sh, n_local in enumerate(self.last_scan.local_composites):
+                self.obs.emit(EV_GCD_EXCHANGE, shard=sh, arg=n_local)
         self._ensure_pages(self._next_page)
         self._install_rows(rows)
 

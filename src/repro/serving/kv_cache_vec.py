@@ -60,6 +60,7 @@ import numpy as np
 
 from repro.core.composite import encode_relationship
 from repro.core.engine.tables import successor_table
+from repro.obs.trace import EV_PREFETCH
 
 from .kv_cache import PagedKVCache
 
@@ -264,6 +265,7 @@ class VectorizedPagedKVCache(PagedKVCache):
             self.slot_of[victim] = EMPTY
             self.in_host[victim] = True
             self.stats.evictions += 1
+            self._note_evict(victim)
         self.slot_page[s] = pid
         self.slot_of[pid] = s
         self.slot_t[s] = self._tick()
@@ -307,6 +309,8 @@ class VectorizedPagedKVCache(PagedKVCache):
             self._insert(succ, True)
             self.stats.prefetches += 1
             self.prefetch_log.append((pid, succ))
+            if self.obs is not None:
+                self.obs.emit(EV_PREFETCH, page=pid, arg=succ)
             budget -= 1
             if budget <= 0:
                 return

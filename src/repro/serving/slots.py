@@ -67,6 +67,9 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs.trace import (EV_ADMIT, EV_COMPLETE, EV_PREEMPT,
+                             EV_PREFILL_CHUNK, EV_RESUME_PREFETCH)
+
 from .elastic import ElasticShardedPagedKVCache
 from .engine import (_STUB_VOCAB, make_expert_backend, make_kv_backend,
                      synthetic_router_groups)
@@ -172,7 +175,7 @@ class _SlotFrontEnd:
                  moe_experts: int = 64, moe_slots: int = 16,
                  moe_topk: int = 4, moe_prefetch_budget: int = 4,
                  moe_groups: int = 16, moe_seed: int = 0, tenants=None,
-                 max_bits: int = 62, dedup: bool = False):
+                 max_bits: int = 62, dedup: bool = False, obs=None):
         if policy not in self.policy_choices:
             raise ValueError(f"policy must be one of "
                              f"{self.policy_choices}, got {policy!r}")
@@ -211,6 +214,14 @@ class _SlotFrontEnd:
         self.resumes = 0
         self.peak_in_flight = 0                  # waiting + occupied
         self.peak_live = 0                       # occupied slots
+        #: observability sink — None by default (inert); attaching one
+        #: also wires it into the page and expert cache tiers so the
+        #: whole stack shares a single event stream
+        self.obs = obs
+        if obs is not None:
+            self.pages.obs = obs
+            if self.experts is not None:
+                self.experts.obs = obs
 
     # ------------------------------------------------------------------ #
     # open-loop submission                                                #
@@ -310,9 +321,55 @@ class _SlotFrontEnd:
             peak_live=self.peak_live,
         )
 
+    # observability (shared emit points — both twins call these at the
+    # same semantic step, so their event streams are bit-identical) ----- #
+
+    def _note_admit(self, slot: int, req: SlotRequest, t: int) -> None:
+        if self.obs is not None:
+            self.obs.emit(EV_ADMIT, tick=t, slot=slot, req=req.req_id,
+                          tenant=req.tenant)
+
+    def _note_preempt(self, slot: int, req: SlotRequest, t: int) -> None:
+        if self.obs is not None:
+            self.obs.emit(EV_PREEMPT, tick=t, slot=slot, req=req.req_id,
+                          tenant=req.tenant,
+                          arg=req.max_new_tokens - len(req.generated))
+
+    def _note_resume(self, slot: int, req: SlotRequest, t: int,
+                     anchor: int) -> None:
+        if self.obs is not None:
+            self.obs.emit(EV_RESUME_PREFETCH, tick=t, slot=slot,
+                          req=req.req_id, page=anchor, tenant=req.tenant)
+
+    def _note_prefill_chunk(self, slot: int, req_id: int, t: int,
+                            tokens: int) -> None:
+        if self.obs is not None:
+            self.obs.emit(EV_PREFILL_CHUNK, tick=t, slot=slot, req=req_id,
+                          arg=tokens)
+
+    def _note_complete(self, slot: int, req: SlotRequest, t: int) -> None:
+        if self.obs is None:
+            return
+        ttft = req.ttft()
+        self.obs.emit(EV_COMPLETE, tick=t, slot=slot, req=req.req_id,
+                      tenant=req.tenant,
+                      arg=-1 if ttft is None else int(ttft))
+        tm = self.obs.telemetry
+        if tm is not None:
+            tpot = req.tpot()
+            tm.complete(0 if ttft is None else int(ttft),
+                        0 if tpot is None else int(round(tpot * 1000)))
+
+    def _note_tick(self) -> None:
+        if self.obs is not None and self.obs.telemetry is not None:
+            self.obs.telemetry.tick_slots(self)
+
     # subclass responsibilities ----------------------------------------- #
 
     def step(self) -> Dict[str, Any]:            # pragma: no cover
+        raise NotImplementedError
+
+    def obs_slot_mix(self) -> Tuple[int, int, int]:  # pragma: no cover
         raise NotImplementedError
 
     def _any_occupied(self) -> bool:             # pragma: no cover
@@ -339,6 +396,13 @@ class SlotMachine(_SlotFrontEnd):
 
     def _any_occupied(self) -> bool:
         return bool((self.phase != PHASE_FREE).any())
+
+    def obs_slot_mix(self) -> Tuple[int, int, int]:
+        """(free, prefill, decode) slot counts — the shared telemetry
+        accessor both twins implement over their own state."""
+        return (int((self.phase == PHASE_FREE).sum()),
+                int((self.phase == PHASE_PREFILL).sum()),
+                int((self.phase == PHASE_DECODE).sum()))
 
     # ------------------------------------------------------------------ #
 
@@ -381,6 +445,7 @@ class SlotMachine(_SlotFrontEnd):
                 self.phase[i] = PHASE_FREE
                 self.slot_req[i] = -1
                 self.preemptions += 1
+                self._note_preempt(i, victim, t)
 
         # -- admission: free slots x FIFO waiting queue ------------------ #
         gate_open = (self.policy == "continuous"
@@ -398,6 +463,7 @@ class SlotMachine(_SlotFrontEnd):
                 self.prefill_done[i] = req.prefill_done
                 self.age[i] = 0
                 fresh[i] = True
+                self._note_admit(i, req, t)
                 if req.req_id not in self.pages.chains:
                     if self.tenants is not None:
                         self.pages.register_request(
@@ -422,11 +488,11 @@ class SlotMachine(_SlotFrontEnd):
                         # the reread window; its §4.2 scan recovers the
                         # successor chain and prefetches the window
                         # back BEFORE the slot re-enters decode
-                        anchor_items.append((
-                            req.req_id,
-                            max(0, L - self.reread_window - 1)))
+                        anchor = max(0, L - self.reread_window - 1)
+                        anchor_items.append((req.req_id, anchor))
                         self.resumes += 1
                         req.was_preempted = False
+                        self._note_resume(i, req, t, anchor)
                 else:
                     self.phase[i] = PHASE_PREFILL
                     req.state = "prefill"
@@ -458,6 +524,11 @@ class SlotMachine(_SlotFrontEnd):
             p_reqs = self.slot_req[p_idx]
             prefill_items = list(zip(p_reqs[rows].tolist(),
                                      pages_idx.tolist()))
+            if self.obs is not None:
+                for k, i in enumerate(p_idx):
+                    if give[k] > 0:
+                        self._note_prefill_chunk(int(i), int(p_reqs[k]),
+                                                 t, int(give[k]))
             self.prefill_done[p_idx] = new.astype(np.int32)
             finished = p_idx[new >= self.need_prompt[p_idx]]
             self.phase[finished] = PHASE_DECODE
@@ -492,6 +563,7 @@ class SlotMachine(_SlotFrontEnd):
             req.state = "done"
             req.done_tick = t
             self.pages.release_request(req.req_id)
+            self._note_complete(int(i), req, t)
         self.phase[done_idx] = PHASE_FREE
         self.slot_req[done_idx] = -1
 
@@ -499,6 +571,7 @@ class SlotMachine(_SlotFrontEnd):
         occ = self.phase != PHASE_FREE
         self.age[occ & ~fresh] += 1
         self.age[fresh & occ] = 0
+        self._note_tick()
         self.now += 1
         self.ticks += 1
         out = {"live": int(occ.sum()), "waiting": len(self.waiting),
@@ -523,6 +596,16 @@ class SlotOracle(_SlotFrontEnd):
 
     def _any_occupied(self) -> bool:
         return any(s is not None for s in self.slots)
+
+    def obs_slot_mix(self) -> Tuple[int, int, int]:
+        """(free, prefill, decode) slot counts — must report exactly
+        what the machine's phase-array histogram reports."""
+        free = sum(s is None for s in self.slots)
+        prefill = sum(1 for s in self.slots
+                      if s is not None and s.state == "prefill")
+        decode = sum(1 for s in self.slots
+                     if s is not None and s.state == "decode")
+        return free, prefill, decode
 
     def step(self) -> Dict[str, Any]:
         t = self.now
@@ -554,6 +637,7 @@ class SlotOracle(_SlotFrontEnd):
                 self.waiting.append(victim)
                 self.slots[best] = None
                 self.preemptions += 1
+                self._note_preempt(best, victim, t)
 
         # admission
         gate_open = (self.policy == "continuous"
@@ -566,6 +650,7 @@ class SlotOracle(_SlotFrontEnd):
                 self.slots[i] = req
                 self.slot_age[i] = 0
                 fresh.add(i)
+                self._note_admit(i, req, t)
                 if req.req_id not in self.pages.chains:
                     if self.tenants is not None:
                         self.pages.register_request(
@@ -582,11 +667,11 @@ class SlotOracle(_SlotFrontEnd):
                 if req.prefill_done >= req.n_prompt:
                     req.state = "decode"
                     if req.was_preempted and L > 0:
-                        anchor_items.append((
-                            req.req_id,
-                            max(0, L - self.reread_window - 1)))
+                        anchor = max(0, L - self.reread_window - 1)
+                        anchor_items.append((req.req_id, anchor))
                         self.resumes += 1
                         req.was_preempted = False
+                        self._note_resume(i, req, t, anchor)
                 else:
                     req.state = "prefill"
         self.peak_live = max(self.peak_live,
@@ -612,6 +697,8 @@ class SlotOracle(_SlotFrontEnd):
                 continue
             give = min(budget, req.n_prompt - req.prefill_done)
             budget -= give
+            if give > 0:
+                self._note_prefill_chunk(i, req.req_id, t, give)
             old, new = req.prefill_done, req.prefill_done + give
             ps = self.page_size
             for j in range(-(-old // ps), -(-new // ps)):
@@ -645,12 +732,14 @@ class SlotOracle(_SlotFrontEnd):
                 req.state = "done"
                 req.done_tick = t
                 self.pages.release_request(req.req_id)
+                self._note_complete(i, req, t)
                 self.slots[i] = None
 
         for i in range(self.max_batch):
             if self.slots[i] is None:
                 continue
             self.slot_age[i] = 0 if i in fresh else self.slot_age[i] + 1
+        self._note_tick()
         self.now += 1
         self.ticks += 1
         live = sum(s is not None for s in self.slots)

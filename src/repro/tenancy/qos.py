@@ -329,6 +329,7 @@ class TenantedPagedKVCache(_TenantedKVBase, PagedKVCache):
             del self.hbm[victim]
             self.host.add(victim)
             self.stats.evictions += 1
+            self._note_evict(victim)
             q.occupancy[t] -= 1
         super()._insert_hbm(pid, prefetched)   # base evict loop: no-op
         q.occupancy[t] += 1
@@ -368,6 +369,7 @@ class _TenantedVecPlacement(_TenantedKVBase):
             self.slot_of[victim] = EMPTY
             self.in_host[victim] = True
             self.stats.evictions += 1
+            self._note_evict(victim)
             q.occupancy[t] -= 1
             self.in_host[pid] = False
             self.slot_page[s] = pid

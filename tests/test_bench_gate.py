@@ -121,6 +121,24 @@ def test_flatten_and_time_markers():
     assert not is_time_derived("slot_vec.ttft_ticks.99")
     assert not is_time_derived("hbm_hit_rate")
     assert not is_time_derived("migrated_bytes")
+    # the observability block is exempt wholesale — its launch ledger
+    # (calls/items included) is reporting, not a gated contract
+    assert is_time_derived("obs.kernel_launches.gcd_batch.calls")
+    assert is_time_derived("obs.registry_build.n")
+    assert not is_time_derived("jobs.0.n")      # only the exact component
+
+
+def test_gate_ignores_obs_block_drift(dirs):
+    base, fresh = dirs
+    withobs = json.loads(json.dumps(PAYLOAD))
+    withobs["obs"] = {"kernel_launches": {
+        "divisibility_scan": {"calls": 4, "items": 1024, "wall_s": 0.5}}}
+    _write(base, "BENCH_case_batching.json", withobs)
+    drifted = json.loads(json.dumps(withobs))
+    drifted["obs"]["kernel_launches"]["divisibility_scan"] = {
+        "calls": 9, "items": 4096, "wall_s": 12.0}
+    _write(fresh, "BENCH_case_batching.json", drifted)
+    assert run_gate(base, fresh) == 0
 
 
 def test_cli_entry(dirs, capsys):

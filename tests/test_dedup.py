@@ -238,9 +238,15 @@ def _lifecycle_drive(kv, ops):
             cow_before = kv.stats.cow_copies
             kv.register_request(rid, list(tokens), tenant=tenant)
             live.append(rid)
-            # COW never rewrites: registration only ADDS composites
+            # COW never rewrites: registration only ADDS composites —
+            # except the deferred age-out flush at its entry, which may
+            # purge composites of RECYCLED primes (each lost composite
+            # must contain an aged prime; see kv.dedup_aged)
             now = set(kv.registry._by_composite)
-            assert composites_before <= now, "COW must not rewrite"
+            aged_primes = {p for _, p in kv.dedup_aged if p > 0}
+            for c in composites_before - now:
+                assert any(c % p == 0 for p in aged_primes), \
+                    "COW must not rewrite live composites"
             composites_before = now
             assert kv.stats.cow_copies >= cow_before
         elif kind == "touch":
@@ -320,6 +326,66 @@ def test_referenced_shared_pages_are_pinned():
         kv.touch_batch([(3, j) for j in range(5)])
         assert kv.stats.evictions > ev0
         assert kv.qos.shared_occupancy == 3
+
+
+def test_zero_ref_shared_page_ages_out_and_recycles_prime():
+    """PR 9 leak regression: evicting a zero-ref shared page used to
+    leave its ``_global_content`` entry and prime alive forever — the
+    content map grew without bound and later registrations could dedup
+    onto the dead page.  Now the eviction ages the page out of the
+    content map immediately, and the NEXT registration flushes the
+    deferred prime release (the registry is quiescent there) — with the
+    (pid, prime) audit trail in ``dedup_aged``, identically in both
+    twins."""
+    from repro.obs import EV_AGE_OUT, Observability
+
+    states = []
+    for cls in (DedupOracle, DedupVectorizedPagedKVCache):
+        kv = cls(hbm_pages=9, page_size=2, prefetch_budget=0, qos=2)
+        obs = Observability()
+        kv.obs = obs
+        prompt = list(range(10))                 # 5 pages of prefix
+        kv.register_request(0, prompt + [100, 101], tenant=0)
+        kv.register_request(1, prompt + [200, 201], tenant=1)  # promote
+        shared = list(kv._req_shared[1])
+        keys_before = len(kv._global_content)
+        kv.touch_batch([(1, j) for j in range(5)])
+        kv.release_request(0)
+        kv.release_request(1)                    # refs -> 0, still cached
+        # new shared content streams through the 3-slot shared quota:
+        # every eviction of a zero-ref page must age it out
+        fresh = [p + 500 for p in prompt]
+        kv.register_request(2, fresh + [300, 301], tenant=0)
+        kv.register_request(3, fresh + [400, 401], tenant=1)
+        kv.touch_batch([(3, j) for j in range(5)])
+        aged = dict(kv.dedup_aged)
+        assert aged, "evicting zero-ref shared pages must age them out"
+        for pid, prime in aged.items():
+            assert pid in shared and prime > 0
+            assert not kv._resident(pid)
+            assert pid not in kv.host            # no host demotion: dead
+            assert pid not in kv._shared_users
+        # the aged pids are unreachable through the content map
+        assert not set(aged) & set(kv._global_content.values())
+        assert len(kv._global_content) < keys_before + len(kv.chains[2]) \
+            + len(kv.chains[3])                  # it shrank, not just grew
+        assert [e.page for e in obs.trace.events()
+                if e.kind == EV_AGE_OUT] == [pid for pid, _ in kv.dedup_aged]
+        # primes are still assigned until the deferred flush...
+        assert kv._aged_pending
+        assert all(kv.assigner.prime_of(pid) is not None for pid in aged)
+        # ...which the next registration performs: primes recycled, and
+        # re-registering the ORIGINAL tokens gets fresh pages (no
+        # aliasing onto the dead pids)
+        kv.register_request(4, prompt + [999], tenant=0)
+        assert not kv._aged_pending
+        for pid in aged:
+            assert kv.assigner.prime_of(pid) is None
+        assert not set(kv.chains[4]) & set(aged)
+        kv.namespace.assert_isolated(kv.registry)
+        states.append((sorted(kv.dedup_aged), kv.dedup_state(),
+                       kv.stats.parity_tuple()))
+    assert states[0] == states[1]                # twin parity incl. aging
 
 
 def test_cow_allocates_fresh_prime_composites_untouched():

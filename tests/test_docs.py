@@ -52,3 +52,19 @@ def test_api_md_large_universe_examples_execute():
     assert blocks, "Large universes section lost its examples"
     for i, block in enumerate(blocks):
         exec(compile(block, f"<api.md large-universes {i}>", "exec"), {})
+
+
+def test_api_md_observability_examples_execute():
+    """The docs/api.md Observability section promises *executed*
+    examples (ISSUE 10): every ```python block in it must run clean.
+    Blocks build on each other (the driven machine/obs pair from the
+    façade block feeds the trace-diff and telemetry blocks), so they
+    share one namespace, in order."""
+    import re
+    text = (ROOT / "docs" / "api.md").read_text()
+    start = text.index("## Observability")
+    blocks = re.findall(r"```python\n(.*?)```", text[start:], re.S)
+    assert blocks, "Observability section lost its examples"
+    ns = {}
+    for i, block in enumerate(blocks):
+        exec(compile(block, f"<api.md observability {i}>", "exec"), ns)

@@ -45,9 +45,17 @@ from pathlib import Path
 TIME_MARKERS = ("wall", "per_s", "latency", "speedup", "ttft_ms",
                 "tpot_ms")
 
+# payload components excluded wholesale: the observability block
+# (kernel launch ledger, progress rates — DESIGN.md §13) is wall-clock
+# reporting by construction, and its counters (calls, items) depend on
+# jit cache state, not on placement behavior
+EXEMPT_COMPONENTS = ("obs",)
+
 
 def is_time_derived(path: str) -> bool:
     for part in path.lower().split("."):
+        if part in EXEMPT_COMPONENTS:
+            return True
         if part.endswith(("_s", "_ms")):
             return True
         if any(marker in part for marker in TIME_MARKERS):

@@ -1,0 +1,119 @@
+#!/usr/bin/env python
+"""Convert an ``Observability.export_json`` payload into Chrome
+``trace_event`` JSON (load it in chrome://tracing or https://ui.perfetto.dev).
+
+Mapping (one synthetic microsecond timeline; 1 engine tick = 1 ms so
+tick-granular serving traces stay readable next to wall-clock kernel
+spans):
+
+  * trace ring rows   -> instant events (``ph: "i"``) on pid 0
+                         ("serving"); slot-scoped events land on
+                         ``tid = slot``, cache/shard events on a shared
+                         "cache" track
+  * telemetry gauges  -> counter events (``ph: "C"``) keyed by gauge
+                         name at their recorded tick
+  * kernel ledger     -> complete events (``ph: "X"``) on pid 1
+                         ("kernels"), laid end to end with their
+                         accumulated wall clocks
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.serve --trace obs.json
+    python tools/trace_view.py obs.json chrome_trace.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+TICK_US = 1000          # one serving tick rendered as 1 ms
+CACHE_TID = 99          # track for events with no slot attribution
+
+_META = [
+    {"ph": "M", "pid": 0, "name": "process_name",
+     "args": {"name": "serving"}},
+    {"ph": "M", "pid": 0, "tid": CACHE_TID, "name": "thread_name",
+     "args": {"name": "cache"}},
+    {"ph": "M", "pid": 1, "name": "process_name",
+     "args": {"name": "kernels"}},
+]
+
+
+def convert(payload: dict) -> dict:
+    """Observability export dict -> Chrome trace_event dict."""
+    schema = {int(k): v for k, v in payload.get("schema", {}).items()}
+    out = list(_META)
+
+    # -- trace ring rows -> instant events -------------------------------- #
+    trace = payload.get("trace") or {}
+    fields = trace.get("fields") or ["kind", "tick", "slot", "req", "page",
+                                     "tenant", "shard", "arg"]
+    now = 0
+    for seq, row in enumerate(trace.get("events", [])):
+        ev = dict(zip(fields, row))
+        tick = ev.get("tick", -1)
+        if tick >= 0:               # untick'd events ride the last tick seen
+            now = tick
+        slot = ev.get("slot", -1)
+        args = {k: v for k, v in ev.items()
+                if k not in ("kind", "tick", "slot") and v != -1}
+        args["seq"] = seq
+        out.append({
+            "name": schema.get(ev.get("kind"), f"kind{ev.get('kind')}"),
+            "ph": "i", "s": "t",
+            "ts": now * TICK_US,
+            "pid": 0,
+            "tid": slot if slot >= 0 else CACHE_TID,
+            "args": args,
+        })
+
+    # -- telemetry gauges -> counter events ------------------------------- #
+    telem = payload.get("telemetry") or {}
+    for name, ring in sorted((telem.get("gauges") or {}).items()):
+        for tick, value in ring:
+            out.append({
+                "name": name, "ph": "C",
+                "ts": max(int(tick), 0) * TICK_US,
+                "pid": 0,
+                "args": {name: value},
+            })
+
+    # -- kernel launch ledger -> complete spans --------------------------- #
+    cursor = 0
+    for name, rec in sorted((payload.get("kernel_launches") or {}).items()):
+        dur = max(int(rec.get("wall_s", 0.0) * 1e6), 1)
+        out.append({
+            "name": name, "ph": "X",
+            "ts": cursor, "dur": dur,
+            "pid": 1, "tid": 0,
+            "args": {"calls": rec.get("calls", 0),
+                     "items": rec.get("items", 0),
+                     "wall_s": rec.get("wall_s", 0.0)},
+        })
+        cursor += dur
+
+    return {"traceEvents": out, "displayTimeUnit": "ms"}
+
+
+def main(argv=None) -> dict:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not argv or argv[0] in ("-h", "--help"):
+        print(__doc__)
+        return {}
+    with open(argv[0]) as fh:
+        payload = json.load(fh)
+    trace = convert(payload)
+    if len(argv) > 1:
+        with open(argv[1], "w") as fh:
+            json.dump(trace, fh, indent=1)
+            fh.write("\n")
+        print(f"wrote {len(trace['traceEvents'])} trace events "
+              f"-> {argv[1]}")
+    else:
+        json.dump(trace, sys.stdout, indent=1)
+        print()
+    return trace
+
+
+if __name__ == "__main__":
+    main()
